@@ -1,0 +1,59 @@
+"""Beyond-paper: HoD query-engine scaling characteristics.
+
+Two sweeps the paper cannot show (it processes one query at a time):
+
+* batch scaling — per-query time vs. batch size (the batched sweeps
+  amortize fixed scan cost across sources; the paper's Table 5 workload
+  is exactly this);
+* core-mode comparison — paper-faithful Dijkstra core vs. in-JAX Bellman
+  iterations vs. the beyond-paper precomputed-closure tropical matmul.
+"""
+import time
+
+import numpy as np
+
+from repro.core import QueryEngine
+
+from .common import build_hod_cached, dataset_suite, fmt_row
+
+
+def run():
+    name = "USRN-like"
+    g = dataset_suite(undirected=True)[name]
+    art = build_hod_cached(name, g)
+
+    print("\n== HoD batch scaling (per-query ms, USRN-like) ==")
+    print(fmt_row(["batch", "per-query ms", "amortization"]))
+    rng = np.random.default_rng(0)
+    base = None
+    for batch in (1, 4, 16, 64, 128):
+        srcs = rng.integers(0, g.n, batch).astype(np.int32)
+        art.engine.ssd(srcs)  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            art.engine.ssd(srcs)
+        per = (time.perf_counter() - t0) / (3 * batch) * 1e3
+        base = base or per
+        print(fmt_row([batch, f"{per:.2f}", f"{base/per:.1f}x"]))
+
+    print("\n== core-search modes (batch=32, per-query ms) ==")
+    print(fmt_row(["mode", "per-query ms", "note"]))
+    srcs = rng.integers(0, g.n, 32).astype(np.int32)
+    ref = None
+    for mode, note in [("closure", "beyond-paper: one tropical matmul"),
+                       ("bellman", "in-JAX min-plus to fixpoint"),
+                       ("dijkstra", "paper-faithful host heap")]:
+        eng = QueryEngine(art.index, core_mode=mode)
+        d = eng.ssd(srcs)
+        if ref is None:
+            ref = d
+        else:
+            assert np.allclose(np.where(np.isfinite(d), d, -1),
+                               np.where(np.isfinite(ref), ref, -1),
+                               rtol=1e-5), mode
+        t0 = time.perf_counter()
+        for _ in range(3):
+            eng.ssd(srcs)
+        per = (time.perf_counter() - t0) / (3 * 32) * 1e3
+        print(fmt_row([mode, f"{per:.2f}", note]))
+    return True

@@ -1,0 +1,63 @@
+"""Render the §Roofline markdown table from reports/dryrun/*.json and
+inject it into EXPERIMENTS.md at the ROOFLINE_TABLE marker.
+
+    PYTHONPATH=src python -m benchmarks.inject_roofline
+"""
+import re
+
+from .roofline import load_cells
+
+
+def render() -> str:
+    out = ["| arch | shape | kind | compute_s | memory_s | collective_s "
+           "| dominant | useful | what moves the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("lm", "train"): "fuse attention scores in VMEM (Pallas flash); "
+                         "reduce-scatter block outputs",
+        ("lm", "prefill"): "flash fusion; skip masked upper-diagonal "
+                           "blocks",
+        ("lm", "decode"): "KV streaming already at roofline; int8 KV "
+                          "cache would halve it",
+        ("gnn", "train"): "owner-partitioned / dst-ranged edge layout "
+                          "(§Perf A,B)",
+        ("recsys", "train"): "row-sharded tables already local; fuse "
+                             "bag-sum (kernels/embedding_bag)",
+        ("recsys", "serve"): "embedding-gather bound; cache hot rows",
+        ("recsys", "retrieval"): "sharded matvec + local top-k already "
+                                 "minimal-comm",
+    }
+    fam_of = {}
+    from repro.configs import ARCH_IDS, get_arch
+    for a in ARCH_IDS:
+        fam_of[a] = get_arch(a).FAMILY
+    for r in load_cells("single"):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | FAILED "
+                       f"| | | | | {r.get('error','')} |")
+            continue
+        note = notes.get((fam_of[r["arch"]], r["kind"]), "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | {r['dominant']} "
+            f"| {r['useful_ratio']:.3f} | {note} |")
+    return "\n".join(out)
+
+
+def main():
+    table = render()
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    block = (marker + "\n\n" + table + "\n")
+    # replace marker (and any previously injected table up to the next
+    # blank-line-delimited non-table paragraph)
+    pattern = re.compile(re.escape(marker) + r"(\n+(\|.*\n)*)?")
+    text = pattern.sub(block, text, count=1)
+    open(path, "w").write(text)
+    print(f"injected {table.count(chr(10)) + 1} lines into {path}")
+
+
+if __name__ == "__main__":
+    main()

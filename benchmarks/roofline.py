@@ -1,0 +1,77 @@
+"""§Roofline aggregation: reads reports/dryrun/*.json into the per-cell
+table (three terms, dominant bottleneck, MODEL_FLOPS ratio, byte classes).
+
+Run the dry-run sweep first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+REPORT_DIR = "reports/dryrun"
+
+
+def load_cells(mesh: str = "single"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(REPORT_DIR, f"*__{mesh}.json"))):
+        d = json.load(open(p))
+        if not d.get("ok"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "ok": False, "error": d.get("error")})
+            continue
+        try:
+            from repro.launch.steps import model_flops_for
+            mf = model_flops_for(d["arch"], d["shape"],
+                                 mult=d.get("chips", 256))
+        except Exception:
+            mf = d.get("model_flops", 0.0)
+        pd = d["per_device"]
+        chips = d["chips"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "ok": True,
+            "kind": d["kind"], "chips": chips,
+            "compute_s": d["roofline"]["compute_s"],
+            "memory_s": d["roofline"]["memory_s"],
+            "collective_s": d["roofline"]["collective_s"],
+            "dominant": d["roofline"]["dominant"],
+            "model_flops": mf,
+            "useful_ratio": mf / max(pd["hlo_flops"] * chips, 1.0),
+            "bytes_by_class": pd.get("bytes_by_class", {}),
+            "collectives": pd.get("collectives", {}),
+            "temp_gb": pd["temp_bytes"] / 1e9,
+        })
+    return rows
+
+
+def run():
+    for mesh in ("single", "multi"):
+        rows = load_cells(mesh)
+        if not rows:
+            print(f"(no dry-run reports for mesh={mesh} — run the sweep)")
+            continue
+        print(f"\n== Roofline terms, {mesh}-pod "
+              f"({rows[0].get('chips','?')} chips) ==")
+        hdr = (f"{'arch':22s} {'shape':14s} {'comp_s':>9s} {'mem_s':>9s} "
+               f"{'coll_s':>9s} {'dominant':10s} {'useful':>7s} "
+               f"{'temp_GB':>8s}")
+        print(hdr)
+        for r in rows:
+            if not r["ok"]:
+                print(f"{r['arch']:22s} {r['shape']:14s} FAILED: "
+                      f"{r['error']}")
+                continue
+            print(f"{r['arch']:22s} {r['shape']:14s} "
+                  f"{r['compute_s']:9.3g} {r['memory_s']:9.3g} "
+                  f"{r['collective_s']:9.3g} {r['dominant']:10s} "
+                  f"{r['useful_ratio']:7.3f} {r['temp_gb']:8.1f}")
+        if mesh == "single":
+            dom = {}
+            for r in rows:
+                if r["ok"]:
+                    dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+            print(f"bottleneck census: {dom}")
+    return True

@@ -1,0 +1,43 @@
+"""Benchmark entrypoint: one module per paper table + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--tables 2,3,4,5,6,hod,roof]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="2,3,4,5,6,hod,roof")
+    args = ap.parse_args()
+    want = set(args.tables.split(","))
+    t0 = time.time()
+
+    if "2" in want:
+        from . import table2_preprocessing
+        table2_preprocessing.run()
+    if "3" in want:
+        from . import table3_index_size
+        table3_index_size.run()
+    if "4" in want:
+        from . import table4_query_time
+        table4_query_time.run()
+    if "5" in want:
+        from . import table5_closeness
+        table5_closeness.run()
+    if "6" in want:
+        from . import table6_directed
+        table6_directed.run()
+    if "hod" in want:
+        from . import hod_scaling
+        hod_scaling.run()
+    if "roof" in want:
+        from . import roofline
+        roofline.run()
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

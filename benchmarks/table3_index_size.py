@@ -1,0 +1,26 @@
+"""Table 3 — index space consumption: HoD vs VC-Index."""
+from repro.core.baselines import VCIndex
+
+from .common import build_hod_cached, dataset_suite, fmt_row
+
+_VC_CACHE = {}
+
+
+def vc_cached(name, g):
+    if name not in _VC_CACHE:
+        _VC_CACHE[name] = VCIndex(g, top_nodes=256)
+    return _VC_CACHE[name]
+
+
+def run():
+    print("\n== Table 3: index size (MB; paper: GB) ==")
+    print(fmt_row(["dataset", "graph", "HoD", "VC-Index"]))
+    rows = []
+    for name, g in dataset_suite(undirected=True).items():
+        art = build_hod_cached(name, g)
+        vc = vc_cached(name, g)
+        print(fmt_row([name, f"{g.nbytes()/1e6:.1f}",
+                       f"{art.index_bytes/1e6:.1f}",
+                       f"{vc.index_bytes()/1e6:.1f}"]))
+        rows.append((name, art.index_bytes, vc.index_bytes()))
+    return rows

@@ -1,0 +1,43 @@
+"""Table 5 — closeness-estimation wall time (Eppstein–Wang, ε=0.1).
+
+total = preprocessing + k·per-query, k = ln n / ε².  HoD additionally
+*runs* the estimation end-to-end (batched) on the smallest dataset to
+validate the projection against a measured number.
+"""
+import math
+import time
+
+import numpy as np
+
+from repro.core.closeness import estimate_closeness
+
+from .common import build_hod_cached, dataset_suite, fmt_row, time_hod_query
+from .table4_query_time import run as _  # noqa: F401 (shared cache warmup)
+
+
+def run():
+    print("\n== Table 5: closeness estimation, projected total (s) ==")
+    print(fmt_row(["dataset", "k", "HoD(total)", "HoD(measured)",
+                   "VC-Index(proj)"]))
+    from repro.core.baselines import VCIndex
+    from .table3_index_size import vc_cached
+    rows = []
+    for name, g in dataset_suite(undirected=True).items():
+        art = build_hod_cached(name, g)
+        k = int(math.ceil(math.log(g.n) / 0.01))
+        hod_q, _io = time_hod_query(art, g, n_queries=16)
+        hod_total = art.build_seconds + k * hod_q
+        measured = ""
+        if g.n <= 5000:
+            t0 = time.perf_counter()
+            estimate_closeness(art.engine, eps=0.1, batch_size=64)
+            measured = f"{art.build_seconds + time.perf_counter()-t0:.1f}"
+        vc = vc_cached(name, g)
+        t0 = time.perf_counter()
+        vc.ssd(0)
+        vc_q = time.perf_counter() - t0
+        vc_total = vc.build_seconds + k * vc_q
+        print(fmt_row([name, k, f"{hod_total:.1f}", measured or "-",
+                       f"{vc_total:.1f}"]))
+        rows.append((name, k, hod_total, vc_total))
+    return rows

@@ -1,0 +1,45 @@
+"""The paper's flagship application (Table 5): estimate closeness
+centrality for every node via Eppstein–Wang sampling over batched SSD
+queries.
+
+    PYTHONPATH=src python examples/closeness_centrality.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.build_fast import build_hod_fast
+from repro.core import (BuildConfig, QueryEngine, 
+                        estimate_closeness, pack_index, power_law_digraph,
+                        symmetrize)
+
+
+def main():
+    g = symmetrize(power_law_digraph(3000, 5, seed=0))
+    print(f"graph: {g.n} nodes, {g.m} edges (FB-like)")
+
+    t0 = time.perf_counter()
+    res = build_hod_fast(g, BuildConfig(max_core_nodes=256,
+                                   max_core_edges=1 << 14))
+    ix = pack_index(g, res)
+    engine = QueryEngine(ix)
+    print(f"preprocessing: {time.perf_counter()-t0:.1f}s")
+
+    t0 = time.perf_counter()
+    out = estimate_closeness(engine, eps=0.1, batch_size=64)
+    print(f"closeness for all {g.n} nodes: {out.k} SSD queries in "
+          f"{out.query_seconds:.1f}s ({out.batches} batches)")
+
+    top = np.argsort(-out.closeness)[:5]
+    print("top-5 central nodes:", top.tolist())
+    print("their closeness:", np.round(out.closeness[top], 4).tolist())
+
+    # sanity: hubs (high degree) should rank central in a power-law graph
+    deg = np.diff(g.out_ptr)
+    print(f"median degree of top-50 central: "
+          f"{np.median(deg[np.argsort(-out.closeness)[:50]]):.0f} "
+          f"vs global median {np.median(deg):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""HoD index file organization (paper §4.5), packed for TPU sweeps.
+
+The paper stores removed nodes' out-edges in a forward file ``F_f``
+(ascending rank order) and in-edges in a backward file ``F_b`` (descending
+rank order), so both query scans are sequential.  Here the same invariant —
+*file order == traversal order* — becomes *chunk order == scan order*:
+
+* forward edges are grouped by the **rank level of their source** and packed
+  into fixed-size chunks that never straddle a level boundary, so a
+  ``lax.scan`` over chunks relaxes each node only after its distance is
+  final (the level graph is a DAG: every ``F_f``/``F_b`` edge goes strictly
+  up-rank, and no two same-rank nodes are adjacent — §4.2);
+* backward edges are grouped by the **level of their destination** and laid
+  out in descending level order, mirroring the reversed ``F_b`` file;
+* the core graph is closed transitively at build time (Floyd–Warshall), so
+  the query-time core search is a single min-plus matmul against the
+  closure — a beyond-paper optimization; the raw core CSR is kept for the
+  paper-faithful iterative modes.
+
+Padding edges use the sentinel node ``n`` with length +inf: they relax into
+a scrap column and can never win a min.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .build import BuildResult
+from .graph import Digraph
+
+__all__ = ["HoDIndex", "pack_index", "floyd_warshall_closure"]
+
+INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass
+class HoDIndex:
+    """Query-ready HoD index. All arrays numpy; node ids are *permuted* ids
+    (removal order first, core last); ``assoc`` values are original ids."""
+
+    n: int                    # original node count
+    n_pad: int                # padded node dim (sentinel column + alignment)
+    n_noncore: int
+    n_core: int
+    n_levels: int
+    chunk: int
+    perm: np.ndarray          # [n] original id -> permuted id
+    inv_perm: np.ndarray      # [n] permuted id -> original id
+    level_ptr: np.ndarray     # [n_levels+1] permuted-node ranges per level
+    rank: np.ndarray          # [n] per original id (1-based; core = L+1)
+
+    # forward sweep chunks: ascending level order  [n_chunks_f, chunk]
+    f_src: np.ndarray
+    f_dst: np.ndarray
+    f_w: np.ndarray
+    f_assoc: np.ndarray
+
+    # backward sweep chunks: descending level order  [n_chunks_b, chunk]
+    b_src: np.ndarray
+    b_dst: np.ndarray
+    b_w: np.ndarray
+    b_assoc: np.ndarray
+
+    # core graph: dense closure + raw CSR (paper-faithful modes)
+    core_closure: np.ndarray  # [C, C] f32, closure[i, j] = dist in G_c
+    core_diameter: int        # max hop count of any core shortest path
+    core_ptr: np.ndarray      # raw core CSR (core-local ids)
+    core_dst: np.ndarray
+    core_w: np.ndarray
+    core_assoc: np.ndarray    # original-id predecessor annotation
+
+    def index_bytes(self) -> int:
+        """On-'disk' size of the index (Table 3 accounting)."""
+        arrays = (self.f_src, self.f_dst, self.f_w, self.f_assoc,
+                  self.b_src, self.b_dst, self.b_w, self.b_assoc,
+                  self.core_closure, self.core_ptr, self.core_dst,
+                  self.core_w, self.core_assoc, self.perm, self.level_ptr)
+        return int(sum(a.nbytes for a in arrays))
+
+    @property
+    def m_aug(self) -> int:
+        """Edges in the augmented graph (m' in the paper's complexity)."""
+        real_f = int((self.f_w != INF).sum()) if self.f_w.size else 0
+        real_b = int((self.b_w != INF).sum()) if self.b_w.size else 0
+        return real_f + real_b + int(self.core_dst.shape[0])
+
+    # -- serialization ------------------------------------------------------
+    def save(self, path: str) -> None:
+        meta = np.array([self.n, self.n_pad, self.n_noncore, self.n_core,
+                         self.n_levels, self.chunk, self.core_diameter],
+                        dtype=np.int64)
+        np.savez_compressed(
+            path, meta=meta, perm=self.perm, inv_perm=self.inv_perm,
+            level_ptr=self.level_ptr, rank=self.rank,
+            f_src=self.f_src, f_dst=self.f_dst, f_w=self.f_w,
+            f_assoc=self.f_assoc, b_src=self.b_src, b_dst=self.b_dst,
+            b_w=self.b_w, b_assoc=self.b_assoc,
+            core_closure=self.core_closure, core_ptr=self.core_ptr,
+            core_dst=self.core_dst, core_w=self.core_w,
+            core_assoc=self.core_assoc)
+
+    @staticmethod
+    def load(path: str) -> "HoDIndex":
+        z = np.load(path)
+        meta = z["meta"]
+        return HoDIndex(
+            n=int(meta[0]), n_pad=int(meta[1]), n_noncore=int(meta[2]),
+            n_core=int(meta[3]), n_levels=int(meta[4]), chunk=int(meta[5]),
+            core_diameter=int(meta[6]), perm=z["perm"],
+            inv_perm=z["inv_perm"], level_ptr=z["level_ptr"], rank=z["rank"],
+            f_src=z["f_src"], f_dst=z["f_dst"], f_w=z["f_w"],
+            f_assoc=z["f_assoc"], b_src=z["b_src"], b_dst=z["b_dst"],
+            b_w=z["b_w"], b_assoc=z["b_assoc"],
+            core_closure=z["core_closure"], core_ptr=z["core_ptr"],
+            core_dst=z["core_dst"], core_w=z["core_w"],
+            core_assoc=z["core_assoc"])
+
+
+def _pack_chunks(levels: List[Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]],
+                 chunk: int, sentinel: int):
+    """Pad each level's edge list to a chunk multiple and stack.
+
+    Level-aligned chunking is the correctness lynchpin: a chunk never mixes
+    two levels, so gathers inside a chunk only read already-final rows.
+    """
+    srcs, dsts, ws, assocs = [], [], [], []
+    for (s, d, w, a) in levels:
+        if s.size == 0:
+            continue
+        pad = (-s.size) % chunk
+        srcs.append(np.concatenate(
+            [s, np.full(pad, sentinel, dtype=np.int32)]))
+        dsts.append(np.concatenate(
+            [d, np.full(pad, sentinel, dtype=np.int32)]))
+        ws.append(np.concatenate([w, np.full(pad, INF, dtype=np.float32)]))
+        assocs.append(np.concatenate([a, np.full(pad, -1, dtype=np.int32)]))
+    if not srcs:
+        z_i = np.zeros((0, chunk), dtype=np.int32)
+        z_f = np.zeros((0, chunk), dtype=np.float32)
+        return z_i, z_i.copy(), z_f, z_i.copy()
+    return (np.concatenate(srcs).reshape(-1, chunk),
+            np.concatenate(dsts).reshape(-1, chunk),
+            np.concatenate(ws).reshape(-1, chunk).astype(np.float32),
+            np.concatenate(assocs).reshape(-1, chunk))
+
+
+def floyd_warshall_closure(adj: np.ndarray) -> Tuple[np.ndarray, int]:
+    """All-pairs min-plus closure of the (small, memory-resident) core.
+
+    Beyond-paper: the paper runs Dijkstra inside the core per query; closing
+    the core once at build time turns every query's core search into one
+    tropical matmul.  Returns (closure, hop-diameter bound).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    c = adj.shape[0]
+    if c == 0:
+        return adj.astype(np.float32), 0
+
+    def body(k, d):
+        # Classic FW pivot step, O(C^2) memory (no C^3 intermediate).
+        row = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=0)  # [1, C]
+        col = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=1)  # [C, 1]
+        return jnp.minimum(d, col + row)
+
+    if c <= 4096:
+        closure = jax.lax.fori_loop(0, c, body,
+                                    jnp.asarray(adj, dtype=jnp.float32))
+        closure = np.asarray(closure)
+    else:  # host fallback for very large cores
+        closure = adj.astype(np.float32).copy()
+        for k in range(c):
+            np.minimum(closure, closure[:, k:k + 1] + closure[k:k + 1, :],
+                       out=closure)
+    # Hop diameter of the core (for the paper-faithful Bellman–Ford mode);
+    # the exact BFS bound costs O(C³·diam) — only worth it for small cores.
+    hops = _hop_diameter(adj) if c <= 512 else c
+    return closure, hops
+
+
+def _hop_diameter(adj: np.ndarray) -> int:
+    c = adj.shape[0]
+    if c == 0:
+        return 0
+    finite = (np.isfinite(adj) & ~np.eye(c, dtype=bool)).astype(np.float32)
+    reach = np.eye(c, dtype=bool)
+    frontier = reach.copy()
+    hops = 0
+    for _ in range(c):
+        nxt = ((frontier.astype(np.float32) @ finite) > 0) & ~reach
+        if not nxt.any():
+            break
+        reach |= nxt
+        frontier = nxt
+        hops += 1
+    return max(hops, 1)
+
+
+def pack_index(g: Digraph, result: BuildResult, chunk: int = 2048,
+               node_align: int = 1, closure_limit: int = 2048) -> HoDIndex:
+    """Convert a :class:`BuildResult` into the packed, query-ready layout.
+
+    The all-pairs core closure (beyond-paper fast path) is only computed
+    when the core has ≤ ``closure_limit`` nodes — larger cores (scale-free
+    fill-in) fall back to the paper-faithful iterative core search; the
+    stored closure is then a 0×0 placeholder and ``QueryEngine`` defaults
+    to ``core_mode="bellman"``.
+    """
+    n = result.n
+    order = list(result.removal_order)
+    core_sorted = sorted(result.core_nodes)
+    n_noncore = len(order)
+    n_core = len(core_sorted)
+    assert n_noncore + n_core == n
+
+    perm = np.empty(n, dtype=np.int32)
+    for new_id, old_id in enumerate(order + core_sorted):
+        perm[old_id] = new_id
+    inv_perm = np.empty(n, dtype=np.int32)
+    inv_perm[perm] = np.arange(n, dtype=np.int32)
+
+    n_levels = len(result.level_sizes)
+    level_ptr = np.zeros(n_levels + 1, dtype=np.int64)
+    np.cumsum(result.level_sizes, out=level_ptr[1:])
+
+    n_pad = n + 1
+    if node_align > 1:
+        n_pad = -(-n_pad // node_align) * node_align
+    sentinel = n  # scrap column for padding edges
+
+    def _level_edges(adj_of, forward: bool):
+        """Collect per-level (src, dst, w, assoc) with permuted endpoints."""
+        levels = []
+        for lvl in range(n_levels):
+            lo, hi = level_ptr[lvl], level_ptr[lvl + 1]
+            s_l, d_l, w_l, a_l = [], [], [], []
+            for new_v in range(lo, hi):
+                old_v = order[new_v]
+                for (other, w_e, assoc) in adj_of[old_v]:
+                    if forward:       # out-edge: removed node -> higher rank
+                        s_l.append(new_v)
+                        d_l.append(perm[other])
+                    else:             # in-edge: higher rank -> removed node
+                        s_l.append(perm[other])
+                        d_l.append(new_v)
+                    w_l.append(w_e)
+                    a_l.append(assoc)
+            levels.append((np.asarray(s_l, dtype=np.int32),
+                           np.asarray(d_l, dtype=np.int32),
+                           np.asarray(w_l, dtype=np.float32),
+                           np.asarray(a_l, dtype=np.int32)))
+        return levels
+
+    f_levels = _level_edges(result.f_adj, forward=True)
+    b_levels = _level_edges(result.b_adj, forward=False)
+    b_levels.reverse()  # §4.5: F_b is scanned in descending rank order
+
+    f_src, f_dst, f_w, f_assoc = _pack_chunks(f_levels, chunk, sentinel)
+    b_src, b_dst, b_w, b_assoc = _pack_chunks(b_levels, chunk, sentinel)
+
+    # ---- Core graph --------------------------------------------------------
+    core_local = {old: i for i, old in enumerate(core_sorted)}
+    csr_edges: List[List[Tuple[int, float, int]]] = \
+        [[] for _ in range(n_core)]
+    with_closure = n_core <= closure_limit
+    adj = (np.full((n_core, n_core), INF, dtype=np.float32)
+           if with_closure else None)
+    if with_closure and n_core:
+        np.fill_diagonal(adj, 0.0)
+    for (u, v, w_e, assoc) in result.core_edges:
+        cu, cv = core_local[u], core_local[v]
+        if with_closure and w_e < adj[cu, cv]:
+            adj[cu, cv] = w_e
+        csr_edges[cu].append((cv, w_e, assoc))
+
+    if with_closure:
+        closure, diameter = floyd_warshall_closure(adj)
+    else:
+        closure = np.zeros((0, 0), np.float32)
+        diameter = n_core
+
+    core_ptr = np.zeros(n_core + 1, dtype=np.int64)
+    core_dst_l, core_w_l, core_assoc_l = [], [], []
+    for cu in range(n_core):
+        core_ptr[cu + 1] = core_ptr[cu] + len(csr_edges[cu])
+        for (cv, w_e, assoc) in csr_edges[cu]:
+            core_dst_l.append(cv)
+            core_w_l.append(w_e)
+            core_assoc_l.append(assoc)
+
+    return HoDIndex(
+        n=n, n_pad=int(n_pad), n_noncore=n_noncore, n_core=n_core,
+        n_levels=n_levels, chunk=chunk, perm=perm, inv_perm=inv_perm,
+        level_ptr=level_ptr, rank=result.rank.astype(np.int32),
+        f_src=f_src, f_dst=f_dst, f_w=f_w, f_assoc=f_assoc,
+        b_src=b_src, b_dst=b_dst, b_w=b_w, b_assoc=b_assoc,
+        core_closure=closure, core_diameter=diameter,
+        core_ptr=core_ptr,
+        core_dst=np.asarray(core_dst_l, dtype=np.int32),
+        core_w=np.asarray(core_w_l, dtype=np.float32),
+        core_assoc=np.asarray(core_assoc_l, dtype=np.int32))

@@ -1,0 +1,128 @@
+"""Elastic scaling: rebuild the mesh from surviving hosts and resume.
+
+The recovery contract: checkpoints are mesh-agnostic (plain host arrays +
+manifest), so after a failure the trainer (i) picks the largest mesh the
+survivors can form, (ii) rebuilds shardings from the same *logical* axis
+rules, and (iii) device_puts the checkpoint onto the new mesh.  Batch
+semantics are preserved by keeping the *global* batch constant and
+rescaling per-host microbatches (gradient accumulation absorbs non-divisor
+counts).
+
+``ElasticTrainer`` wires monitor + checkpoint manager + a rebuildable
+train step into a crash-restart loop; tests drive it with injected
+failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from .watchdog import StepMonitor, StragglerPolicy
+
+
+def surviving_mesh(n_devices: int, axis_names: Sequence[str] = ("data",
+                                                                "model"),
+                   model_parallelism: int = 1):
+    """Largest (data, model) mesh from ``n_devices`` devices.
+
+    Model parallelism is fixed by memory (a shard must fit), so survivors
+    re-form ``(n // model_parallelism, model_parallelism)``; leftover
+    devices idle (standard practice — better than a ragged mesh).
+    """
+    devs = jax.devices()[:n_devices]
+    dp = len(devs) // model_parallelism
+    if dp < 1:
+        raise RuntimeError("not enough devices for one model shard")
+    use = devs[: dp * model_parallelism]
+    arr = np.array(use).reshape(dp, model_parallelism)
+    return jax.sharding.Mesh(arr, axis_names)
+
+
+@dataclasses.dataclass
+class ElasticTrainer:
+    """Restart loop: run steps, checkpoint every k, recover on failure.
+
+    ``build`` is called with (mesh_devices, restored_state|None) and must
+    return (state, step_fn); it owns jit/shardings so a re-mesh is a
+    rebuild.  ``failure_injector`` lets tests raise at chosen steps.
+    """
+    ckpt: CheckpointManager
+    build: Callable
+    total_steps: int
+    ckpt_every: int = 10
+    monitor: Optional[StepMonitor] = None
+    failure_injector: Optional[Callable[[int], None]] = None
+    max_restarts: int = 5
+
+    def run(self, n_devices: int) -> Tuple[Dict, Dict]:
+        restarts = 0
+        log = {"restarts": 0, "steps_run": 0, "resumed_from": []}
+        mon = self.monitor or StepMonitor(StragglerPolicy())
+        while True:
+            start = 0
+            restored = None
+            if self.ckpt.latest_step() is not None:
+                template, extra = self._peek_template()
+                restored, extra = self.ckpt.restore(template)
+                start = int(extra["step"]) + 1
+                log["resumed_from"].append(start - 1)
+            state, step_fn = self.build(n_devices, restored)
+            try:
+                for step in range(start, self.total_steps):
+                    if self.failure_injector is not None:
+                        self.failure_injector(step)
+                    mon.start_step()
+                    state = step_fn(state, step)
+                    mon.end_step()
+                    log["steps_run"] += 1
+                    if (step + 1) % self.ckpt_every == 0 \
+                            or step == self.total_steps - 1:
+                        self.ckpt.save(step, state)
+                self.ckpt.wait()
+                return state, log
+            except RuntimeError:
+                restarts += 1
+                log["restarts"] = restarts
+                if restarts > self.max_restarts:
+                    raise
+                continue  # restart from latest checkpoint
+
+    def _peek_template(self):
+        import json
+        import os
+        step = self.ckpt.latest_step()
+        path = os.path.join(self.ckpt.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        # Rebuild a ShapeDtypeStruct pytree from the manifest alone so
+        # restore works with no surviving in-memory state.
+        leaves = {}
+        for rec in manifest["leaves"]:
+            leaves[rec["key"]] = jax.ShapeDtypeStruct(
+                tuple(rec["shape"]), np.dtype(rec["dtype"]))
+        return _unflatten_paths(leaves), manifest["extra"]
+
+
+def _unflatten_paths(flat: Dict[str, jax.ShapeDtypeStruct]):
+    """Inverse of the manager's path flattening for dict/list pytrees."""
+    root: Dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = val
+    return _listify(root)
+
+
+def _listify(node):
+    if not isinstance(node, dict):
+        return node
+    keys = list(node.keys())
+    if keys and all(k.isdigit() for k in keys):
+        return [_listify(node[str(i)]) for i in range(len(keys))]
+    return {k: _listify(v) for k, v in node.items()}

@@ -1,0 +1,1 @@
+from .ops import relax_bucketed  # noqa: F401

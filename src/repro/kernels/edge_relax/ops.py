@@ -1,0 +1,30 @@
+"""jit'd wrapper: gather (XLA) + fused relax (Pallas)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import relax_bucketed_pallas
+from .ref import relax_bucketed_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "interpret"))
+def relax_bucketed(dist: jnp.ndarray, src_idx: jnp.ndarray,
+                   w: jnp.ndarray, cur: jnp.ndarray,
+                   use_pallas: bool = True,
+                   interpret: bool = True) -> jnp.ndarray:
+    """One level's relaxation over a bucketed in-edge layout.
+
+    dist: [S, N] finalized distances; src_idx: [M, K] source node of each
+    (dst-bucketed, padded) in-edge; w: [M, K] lengths (+inf padding);
+    cur: [S, M] current values of the level's nodes.  Returns updated cur.
+    """
+    gathered = dist[:, src_idx.reshape(-1)].reshape(
+        dist.shape[0], *src_idx.shape)
+    if use_pallas:
+        return relax_bucketed_pallas(gathered, w, cur, interpret=interpret)
+    return relax_bucketed_ref(gathered, w, cur)
+
+
+__all__ = ["relax_bucketed", "relax_bucketed_ref"]

@@ -1,0 +1,1 @@
+from .ops import bag_sum  # noqa: F401

@@ -1,0 +1,22 @@
+"""jit'd EmbeddingBag: bulk gather + fused masked reduce."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import bag_sum_pallas
+from .ref import bag_sum_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def bag_sum(table: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray,
+            use_pallas: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """Multi-hot EmbeddingBag: table [V, D], ids [B, K] (padded), mask
+    [B, K] -> [B, D] bag sums."""
+    gathered = jnp.take(table, ids, axis=0, fill_value=0)
+    if use_pallas:
+        return bag_sum_pallas(gathered, mask, interpret=interpret)
+    return bag_sum_ref(gathered, mask)
+
+
+__all__ = ["bag_sum", "bag_sum_ref"]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the fused bag-sum."""
+import jax.numpy as jnp
+
+
+def bag_sum_ref(gathered: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """out[b, d] = sum_k gathered[b, k, d] * mask[b, k]."""
+    return jnp.sum(gathered * mask[..., None].astype(gathered.dtype), axis=1)

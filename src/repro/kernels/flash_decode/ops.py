@@ -1,0 +1,21 @@
+"""jit'd flash-decoding wrapper."""
+import functools
+
+import jax
+
+from .kernel import flash_decode_pallas
+from .ref import flash_decode_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "use_pallas", "interpret"))
+def flash_decode(q, k_cache, v_cache, kv_len, block_k: int = 512,
+                 use_pallas: bool = True, interpret: bool = True):
+    """One-token GQA over a KV cache; see kernel.py for layout."""
+    if use_pallas:
+        return flash_decode_pallas(q, k_cache, v_cache, kv_len,
+                                   block_k=block_k, interpret=interpret)
+    return flash_decode_ref(q, k_cache, v_cache, kv_len)
+
+
+__all__ = ["flash_decode", "flash_decode_ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash decoding: full-softmax one-token GQA."""
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k_cache, v_cache, kv_len):
+    """q: [B, H, dh]; caches: [B, S, Kh, dh]; positions >= kv_len masked."""
+    b, h, dh = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, dh) * (dh ** -0.5)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg,
+                    k_cache.astype(jnp.float32)).astype(jnp.float32)
+    mask = jnp.arange(s) < kv_len
+    sc = jnp.where(mask[None, None, None], sc, -jnp.inf)
+    p = jnp.exp(sc - sc.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tropical (min-plus) matmul.
+
+``out[i, j] = min_k a[i, k] + b[k, j]`` — the core-search primitive: one
+application of the precomputed core closure advances every source's
+distance vector across the core graph (paper §5.2, closure variant).
+"""
+import jax.numpy as jnp
+
+
+def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Naive O(M·K·N) oracle; materializes the [M, K, N] intermediate."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without touching real hardware:
+  * the pjit/shard_map distribution config is coherent (SPMD partitioning
+    succeeds for the 16×16 single-pod AND 2×16×16 multi-pod mesh);
+  * the per-device memory fits (``compiled.memory_analysis()``);
+  * the roofline terms (§Roofline): FLOPs/bytes from ``cost_analysis()``
+    and collective bytes parsed from the post-SPMD HLO text.
+
+Results are cached as JSON per cell under ``reports/dryrun/`` so the
+80-compile sweep is resumable and parallelizable across processes:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --mesh single          # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--jobs 8]
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+# TPU v5e constants (assigned)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+REPORT_DIR = "reports/dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[m.group(1)]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the (per-device) HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            token = f" {op}("
+            if token not in line and f" {op}-start(" not in line:
+                continue
+            # operands appear inside the call parens
+            try:
+                args = line.split("(", 1)[1]
+            except IndexError:
+                continue
+            for tok in re.findall(r"\w+\[[\d,]*\]", args):
+                out[op] += _shape_bytes(tok)
+            break
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             variant: str = "base") -> Dict:
+    import jax
+
+    from .. import shardlib as sl
+    from ..configs import get_arch
+    from .mesh import make_production_mesh
+    from .steps import build_cell, rules_for
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(mesh.devices.size)
+    rules = rules_for(arch, shape, mesh)
+    with sl.axis_rules(mesh, rules):
+        cell = build_cell(arch, shape, smoke=False, variant=variant)
+        jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate_argnums)
+        lowered = jf.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    # XLA's cost_analysis counts while bodies ONCE; our analyzer multiplies
+    # by trip counts (layer scans, attention chunk scans, MoE loops).
+    from .hlo_analysis import analyze
+    acc = analyze(hlo_text)
+    coll = {k: int(v) for k, v in acc["collectives"].items()}
+
+    flops_dev = float(acc["flops"])
+    bytes_dev = float(acc["bytes"])
+    coll_dev = float(sum(coll.values()))
+    xla_flops_dev = float(cost.get("flops", 0.0))  # body-once reference
+
+    # Terms per the assignment: global quantities over chips × peak.
+    compute_s = flops_dev * n_chips / (n_chips * PEAK_FLOPS)
+    memory_s = bytes_dev * n_chips / (n_chips * HBM_BW)
+    collective_s = coll_dev * n_chips / (n_chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    report = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "chips": n_chips,
+        "ok": True, "variant": variant,
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "xla_body_once_flops": xla_flops_dev,
+            "collective_bytes": coll_dev,
+            "collectives": coll,
+            "bytes_by_class": {k: int(v) for k, v in
+                               acc["bytes_by_class"].items()},
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes",
+                                      0)),
+        },
+        "roofline": {**{k: float(v) for k, v in terms.items()},
+                     "dominant": dominant.replace("_s", "")},
+        "model_flops": float(cell.model_flops),
+        "useful_ratio": (float(cell.model_flops)
+                         / max(flops_dev * n_chips, 1.0)),
+    }
+    return report
+
+
+def cell_path(arch: str, shape: str, mesh_kind: str,
+              variant: str = "base") -> str:
+    suffix = "" if variant == "base" else f"__{variant}"
+    return os.path.join(REPORT_DIR,
+                        f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--variant", choices=["base", "opt"], default="base")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    args = ap.parse_args()
+    os.makedirs(REPORT_DIR, exist_ok=True)
+
+    if not args.all:
+        assert args.arch and args.shape
+        path = cell_path(args.arch, args.shape, args.mesh, args.variant)
+        if os.path.exists(path) and not args.force:
+            print(f"cached: {path}")
+            return 0
+        try:
+            rep = run_cell(args.arch, args.shape, args.mesh, args.variant)
+        except Exception as e:  # record failures too — they are bugs
+            rep = {"arch": args.arch, "shape": args.shape,
+                   "mesh": args.mesh, "ok": False, "error": repr(e),
+                   "variant": args.variant,
+                   "traceback": traceback.format_exc()}
+        with open(path, "w") as f:
+            json.dump(rep, f, indent=1)
+        print(json.dumps({k: v for k, v in rep.items()
+                          if k not in ("traceback",)}, indent=1))
+        return 0 if rep.get("ok") else 1
+
+    # --all: drive one subprocess per cell (isolates device-count init and
+    # parallelizes compilation across processes).
+    from ..configs import all_cells
+    cells, skipped = all_cells()
+    for a, s, why in skipped:
+        print(f"SKIP {a} × {s}: {why}")
+    jobs = []
+    for mesh_kind in args.meshes.split(","):
+        for a, s in cells:
+            if os.path.exists(cell_path(a, s, mesh_kind)) and not args.force:
+                continue
+            jobs.append((a, s, mesh_kind))
+    print(f"{len(jobs)} cells to compile")
+    running = []
+    fails = 0
+    while jobs or running:
+        while jobs and len(running) < args.jobs:
+            a, s, mk = jobs.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", mk]
+            running.append(((a, s, mk), subprocess.Popen(
+                cmd, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)))
+        done = [(key, pr) for key, pr in running if pr.poll() is not None]
+        running = [(key, pr) for key, pr in running if pr.poll() is None]
+        for (a, s, mk), pr in done:
+            ok = pr.returncode == 0
+            fails += 0 if ok else 1
+            print(f"{'OK  ' if ok else 'FAIL'} {a} × {s} × {mk}")
+        time.sleep(1.0)
+    print(f"done; {fails} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,314 @@
+"""Post-SPMD HLO cost analyzer with correct while-loop accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+which understates every scanned model (layer scans, attention chunk scans,
+MoE loops) by the trip count — and silently drops collectives inside loops
+from any naive text scan.  This analyzer parses the optimized HLO text and
+computes, per computation and transitively through ``calls=`` /
+``condition=/body=`` edges:
+
+* flops         — dot ops: 2·|result|·|contracted dims| (from the lhs
+                  operand's shape resolved in the computation-local symbol
+                  table); elementwise/reduce ops contribute |result|.
+* bytes         — operand + result bytes of top-level ops (fusions count
+                  their boundary, matching XLA's bytes-accessed semantics).
+* collective bytes — operand bytes of all-reduce / all-gather /
+                  reduce-scatter / all-to-all / collective-permute,
+                  bucketed per op kind.
+
+While ops multiply their body+condition cost by ``known_trip_count`` (from
+``backend_config``), falling back to the loop-bound constant in the
+condition computation.  Conditionals take the max across branches.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 1, "u1": 1, "s1": 1, "f8e4m3b11fnuz": 1, "f8e3m4": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs",
+    "cosine", "sine", "atan2", "logistic", "reduce", "reduce-window",
+    "compare", "select", "and", "or", "xor", "clamp", "remainder",
+    "exponential-minus-one", "log-plus-one", "cbrt", "erf",
+}
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "bitcast-convert",
+}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over every shape token in ``text``."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_TOKEN.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _first_shape_dims(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_TOKEN.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+class Op:
+    __slots__ = ("name", "result", "opcode", "rest", "operands")
+
+    def __init__(self, name, result, opcode, rest):
+        self.name = name
+        self.result = result
+        self.opcode = opcode
+        self.rest = rest                      # operand list + attributes
+        self.operands = [x[1:] for x in re.findall(r"%[\w.\-]+",
+                                                   rest.split("metadata")[0])]
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.ops: List[Op] = []
+        self.shapes: Dict[str, str] = {}      # op name -> result type text
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if (not line.startswith(" ")) and ("{" in line) and ("->" in line):
+            m = _COMP_HEADER.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                # params declared in header: %name: type
+                for pm in re.finditer(r"([\w.\-]+):\s*([^,)]+)",
+                                      m.group(2)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            name, result, opcode, rest = m.groups()
+            op = Op(name, result, opcode, rest)
+            cur.ops.append(op)
+            cur.shapes[name] = result
+    return comps
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = re.search(r'known_trip_count[^0-9]*?"n":"(\d+)"', op.rest)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"condition=%([\w.\-]+)", op.rest)
+    if m and m.group(1) in comps:
+        best = 1
+        for o in comps[m.group(1)].ops:
+            if o.opcode == "constant":
+                c = re.match(r"(\d+)\)", o.rest)
+                if c:
+                    best = max(best, int(c.group(1)))
+        return best
+    return 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, rdims = _first_shape_dims(op.result) or ("", [])
+    out = 1.0
+    for d in rdims:
+        out *= d
+    # contraction size from the lhs operand shape
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contract = 1.0
+    if cm and op.operands:
+        lhs_t = comp.shapes.get(op.operands[0], "")
+        sh = _first_shape_dims(lhs_t)
+        if sh:
+            dims = sh[1]
+            for idx in (cm.group(1).split(",") if cm.group(1) else []):
+                i = int(idx)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * out * contract
+
+
+BYTE_CLASSES = ("dot", "elementwise", "gather_scatter", "copy_layout",
+                "collective", "other")
+
+
+class Cost:
+    __slots__ = ("flops", "bytes", "coll", "by_class")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = {k: 0.0 for k in COLLECTIVES}
+        self.by_class = {k: 0.0 for k in BYTE_CLASSES}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+        for k in BYTE_CLASSES:
+            self.by_class[k] += other.by_class[k] * mult
+
+    def add_bytes(self, n: float, cls: str):
+        self.bytes += n
+        self.by_class[cls] += n
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_module(text)
+    memo: Dict[str, Cost] = {}
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()          # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                trips = _trip_count(op, comps)
+                bm = re.search(r"body=%([\w.\-]+)", op.rest)
+                cm = re.search(r"condition=%([\w.\-]+)", op.rest)
+                sub = Cost()
+                if bm:
+                    sub.add(comp_cost(bm.group(1)))
+                if cm:
+                    sub.add(comp_cost(cm.group(1)))
+                total.add(sub, trips)
+                continue
+            if oc == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"(?:true|false)_computation=%([\w.\-]+))", op.rest)
+                names: List[str] = []
+                for grp in branches:
+                    if grp[0]:
+                        names += [x.strip().lstrip("%")
+                                  for x in grp[0].split(",")]
+                    if grp[1]:
+                        names.append(grp[1])
+                if names:
+                    worst = max((comp_cost(n) for n in names),
+                                key=lambda c: c.flops + c.bytes,
+                                default=Cost())
+                    total.add(worst)
+                continue
+            cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+            if cm:  # fusion/call: inner flops+collectives, boundary bytes
+                sub = comp_cost(cm.group(1))
+                total.flops += sub.flops
+                for k in COLLECTIVES:
+                    total.coll[k] += sub.coll[k]
+                _, rb = _shape_elems_bytes(op.result)
+                # Gather-aware operand charging: an operand vastly larger
+                # than the fusion's result is being indexed into (embedding
+                # tables, node-feature gathers) — real HBM traffic is the
+                # gathered rows, not the whole table.  Cap such operands at
+                # 4× the result size.
+                # 16× headroom keeps in-fusion reductions honest while still
+                # catching pathological whole-table reads.
+                ob = 0
+                for name in op.operands:
+                    _, o1 = _shape_elems_bytes(comp.shapes.get(name, ""))
+                    ob += min(o1, max(16 * rb, 1 << 20))
+                cls = "dot" if sub.flops > 0 else "elementwise"
+                total.add_bytes(rb + ob, cls)
+                continue
+            if oc in COLLECTIVES or oc.rstrip("-start") in COLLECTIVES \
+                    or oc.replace("-start", "") in COLLECTIVES:
+                base = oc.replace("-start", "")
+                if base in COLLECTIVES:
+                    _, b = _shape_elems_bytes(_operand_shapes(op, comp))
+                    total.coll[base] += b
+                    total.add_bytes(b, "collective")
+                continue
+            if oc == "dot":
+                total.flops += _dot_flops(op, comp)
+                _, b = _shape_elems_bytes(
+                    op.result + " " + _operand_shapes(op, comp))
+                total.add_bytes(b, "dot")
+                continue
+            if oc in _SKIP_BYTES_OPS:
+                continue
+            e, b = _shape_elems_bytes(op.result)
+            if oc in ELEMENTWISE_FLOP_OPS or oc in (
+                    "broadcast", "convert", "iota", "reverse", "pad",
+                    "concatenate", "slice", "reshape"):
+                # TPU-fusion convention: producer-consumer chains of
+                # elementwise/layout ops fuse — count result bytes only.
+                total.flops += e if oc in ELEMENTWISE_FLOP_OPS else 0
+                total.add_bytes(b, "elementwise")
+                continue
+            _, ob = _shape_elems_bytes(_operand_shapes(op, comp))
+            if oc in ("gather", "dynamic-slice"):
+                # traffic = gathered rows (result) + indices, not the table
+                total.add_bytes(2 * b, "gather_scatter")
+            elif oc in ("scatter", "dynamic-update-slice", "sort",
+                        "custom-call"):
+                total.add_bytes(b + min(ob, 4 * b), "gather_scatter")
+            elif oc in ("copy", "transpose", "copy-start", "copy-done"):
+                total.add_bytes(b, "copy_layout")
+            else:
+                total.add_bytes(b + ob, "other")
+        memo[name] = total
+        return total
+
+    def _operand_shapes(op: Op, comp: Computation) -> str:
+        return " ".join(comp.shapes.get(o, "") for o in op.operands)
+
+    # bind helper before use
+    analyze_cost = comp_cost
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0,
+                "collectives": {k: 0.0 for k in COLLECTIVES}}
+    c = analyze_cost(entry)
+    return {"flops": c.flops, "bytes": c.bytes,
+            "collectives": dict(c.coll),
+            "bytes_by_class": dict(c.by_class),
+            "collective_bytes": float(sum(c.coll.values()))}

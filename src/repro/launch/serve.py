@@ -1,0 +1,62 @@
+"""Serving driver: batched SSD/SSSP queries over a HoD index (the paper's
+workload) or LM decode — request batching, latency percentiles.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..core.build_fast import build_hod_fast
+from ..core import (BuildConfig, QueryEngine,  grid_road_graph,
+                    pack_index, power_law_digraph)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="road", choices=["road", "web"])
+    ap.add_argument("--side", type=int, default=60)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--sssp", action="store_true")
+    args = ap.parse_args()
+
+    g = (grid_road_graph(args.side) if args.graph == "road"
+         else power_law_digraph(args.side * args.side, 4, weighted=True))
+    print(f"graph: n={g.n} m={g.m}")
+    t0 = time.perf_counter()
+    res = build_hod_fast(g, BuildConfig(max_core_nodes=512,
+                                   max_core_edges=1 << 15))
+    ix = pack_index(g, res, chunk=2048)
+    print(f"index built in {time.perf_counter()-t0:.1f}s "
+          f"({ix.n_levels} levels, core {ix.n_core}, "
+          f"{res.stats.shortcuts_added} shortcuts)")
+    eng = QueryEngine(ix)
+
+    rng = np.random.default_rng(0)
+    sources = rng.integers(0, g.n, args.requests).astype(np.int32)
+    lat = []
+    for lo in range(0, args.requests, args.batch):
+        batch = sources[lo: lo + args.batch]
+        if batch.shape[0] < args.batch:
+            batch = np.pad(batch, (0, args.batch - batch.shape[0]),
+                           mode="edge")
+        t0 = time.perf_counter()
+        if args.sssp:
+            eng.sssp(batch)
+        else:
+            eng.ssd(batch)
+        lat.append((time.perf_counter() - t0) / batch.shape[0])
+    lat = np.array(lat) * 1e3
+    print(f"served {args.requests} {'SSSP' if args.sssp else 'SSD'} "
+          f"queries, batch={args.batch}")
+    print(f"per-query latency: mean {lat.mean():.2f} ms  "
+          f"p50 {np.percentile(lat, 50):.2f}  "
+          f"p99 {np.percentile(lat, 99):.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

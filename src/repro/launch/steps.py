@@ -1,0 +1,588 @@
+"""Cell builder: (architecture × input shape) -> executable step + specs.
+
+A *cell* packages everything the dry-run, the trainer, and the smoke tests
+need: the step function (train_step / prefill / decode / serve /
+retrieval), its argument pytree (ShapeDtypeStructs for the dry-run,
+concrete arrays for smoke mode), per-argument shardings resolved from the
+logical axis rules, and the analytic MODEL_FLOPS used by §Roofline.
+
+Every full-size config is only ever *traced* (jax.eval_shape — zero
+allocation); smoke mode instantiates the reduced config for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import shardlib as sl
+from ..configs import get_arch
+from ..configs.shapes import SHAPE_PARAMS
+from ..models import dlrm as dlrm_mod
+from ..models import transformer as tf
+from ..models.gnn import equiformer_v2, gcn, gin, schnet
+from ..models.gnn.common import GraphBatch
+from ..optim import adamw_init, adamw_update
+from ..optim.schedules import cosine_schedule
+from . import mesh as mesh_mod
+
+GNN_MODULES = {"gcn-cora": gcn, "gin-tu": gin, "schnet": schnet,
+               "equiformer-v2": equiformer_v2}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    family: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Optional[Tuple]
+    donate_argnums: Tuple[int, ...]
+    model_flops: float
+    meta: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sharding resolution helpers
+# ---------------------------------------------------------------------------
+
+def _resolve(logical_tree):
+    """Map a pytree of logical-axis tuples (or None) to NamedShardings."""
+    def leaf(ax):
+        if ax is None:
+            return sl.sharding_for()
+        return sl.sharding_for(*ax)
+    return jax.tree.map(leaf, logical_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, tuple))
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _mesh_total() -> int:
+    mesh = sl.current_mesh()
+    return int(np.prod(list(mesh.shape.values()))) if mesh is not None else 1
+
+
+def rules_for(arch_id: str, shape_name: str, mesh):
+    mod = get_arch(arch_id)
+    params = SHAPE_PARAMS[mod.FAMILY][shape_name]
+    kind = params["kind"]
+    if mod.FAMILY == "lm":
+        if kind == "train":
+            return mesh_mod.rules_train_lm(mesh)
+        return mesh_mod.rules_serve_lm(mesh, params["global_batch"])
+    if mod.FAMILY == "gnn":
+        return mesh_mod.rules_gnn(mesh)
+    return mesh_mod.rules_recsys(mesh, params.get("batch", 0))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_train_step(cfg):
+    def step(state, tokens, labels):
+        def lf(p):
+            return tf.loss_fn(p, tokens, labels, cfg)
+        loss, grads = jax.value_and_grad(lf)(state["params"])
+        lr = cosine_schedule(state["opt"].count, 3e-4, 2000, 200_000)
+        new_p, new_opt, gnorm = adamw_update(state["params"], grads,
+                                             state["opt"], lr)
+        return {"params": new_p, "opt": new_opt}, \
+            {"loss": loss, "gnorm": gnorm}
+    return step
+
+
+def _lm_flops(cfg, kind, batch, seq):
+    n_act = cfg.active_param_count()
+    # per-token per-layer attention context: S/2 causal, ~W for local layers
+    ctx_global = seq / 2
+    if cfg.sliding_window and cfg.local_global_period > 1:
+        period = cfg.local_global_period
+        ctx = ((period - 1) / period * min(cfg.sliding_window, seq)
+               + (1 / period) * ctx_global)
+    else:
+        ctx = ctx_global
+    attn = 4 * cfg.n_heads * cfg.hd * ctx  # qk + av per token per layer
+    if kind == "train":
+        toks = batch * seq
+        return 6.0 * n_act * toks + 3 * cfg.n_layers * attn * toks
+    if kind == "prefill":
+        toks = batch * seq
+        return 2.0 * n_act * toks + cfg.n_layers * attn * toks
+    # decode: one token per sequence; attention reads the full cache
+    per_tok_attn = 4 * cfg.n_heads * cfg.hd * seq
+    if cfg.sliding_window and cfg.local_global_period > 1:
+        period = cfg.local_global_period
+        local_frac = (period - 1) / period
+        per_tok_attn = (local_frac * 4 * cfg.n_heads * cfg.hd
+                        * min(cfg.sliding_window, seq)
+                        + (1 / period) * 4 * cfg.n_heads * cfg.hd * seq)
+        per_tok_attn *= cfg.n_layers
+    else:
+        per_tok_attn *= cfg.n_layers
+    return batch * (2.0 * n_act + per_tok_attn)
+
+
+def _build_lm_cell(arch_id, shape_name, mod, smoke):
+    cfg = mod.smoke_config() if smoke else mod.CONFIG
+    sp = dict(SHAPE_PARAMS["lm"][shape_name])
+    kind = sp["kind"]
+    if smoke:
+        sp["seq_len"] = 64 if kind != "decode" else 128
+        sp["global_batch"] = 2
+    b, s = sp["global_batch"], sp["seq_len"]
+
+    params_shape = jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    p_logical = tf.param_shardings(cfg)
+
+    if kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        state_shape = {"params": params_shape, "opt": opt_shape}
+        state_logical = {
+            "params": p_logical,
+            "opt": {"m": p_logical, "v": p_logical, "count": None},
+        }
+        tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        fn = _lm_train_step(cfg)
+        if smoke:
+            params = tf.init_params(jax.random.PRNGKey(0), cfg)
+            state = {"params": params, "opt": adamw_init(params)}
+            rng = np.random.default_rng(0)
+            toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + 1)),
+                               jnp.int32)
+            args = (state, toks[:, :-1], toks[:, 1:])
+            return Cell(arch_id, shape_name, kind, "lm", fn, args, None,
+                        (0,), _lm_flops(cfg, kind, b, s), {"cfg": cfg})
+        in_sh = (_resolve(state_logical), sl.sharding_for("batch", None),
+                 sl.sharding_for("batch", None))
+        # OptState is a NamedTuple — rebuild matching structure
+        in_sh = ({"params": in_sh[0]["params"],
+                  "opt": type(opt_shape)(m=in_sh[0]["opt"]["m"],
+                                         v=in_sh[0]["opt"]["v"],
+                                         count=sl.sharding_for())},
+                 in_sh[1], in_sh[2])
+        args = (state_shape, tok_sds, tok_sds)
+        return Cell(arch_id, shape_name, kind, "lm", fn, args, in_sh, (0,),
+                    _lm_flops(cfg, kind, b, s), {"cfg": cfg})
+
+    # serving: bf16 params
+    serve_params_shape = jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(
+            sd.shape, jnp.bfloat16 if sd.dtype == jnp.float32 else sd.dtype),
+        params_shape)
+    p_shard = _resolve(p_logical)
+
+    if kind == "prefill":
+        fn = functools.partial(tf.prefill, cfg=cfg)
+        if smoke:
+            params = jax.tree.map(
+                lambda a: a.astype(jnp.bfloat16)
+                if a.dtype == jnp.float32 else a,
+                tf.init_params(jax.random.PRNGKey(0), cfg))
+            toks = jnp.asarray(np.random.default_rng(0).integers(
+                0, cfg.vocab, (b, s)), jnp.int32)
+            return Cell(arch_id, shape_name, kind, "lm", fn, (params, toks),
+                        None, (), _lm_flops(cfg, kind, b, s), {"cfg": cfg})
+        tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        in_sh = (p_shard, sl.sharding_for("batch", None))
+        return Cell(arch_id, shape_name, kind, "lm", fn,
+                    (serve_params_shape, tok_sds), in_sh, (),
+                    _lm_flops(cfg, kind, b, s), {"cfg": cfg})
+
+    # decode
+    fn = functools.partial(tf.decode_step, cfg=cfg)
+    cache_shape = jax.eval_shape(
+        lambda: tf.make_cache(cfg, b, s, dtype=jnp.bfloat16))
+    cache_logical = tf.cache_shardings(cfg)
+    if smoke:
+        params = jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16) if a.dtype == jnp.float32 else a,
+            tf.init_params(jax.random.PRNGKey(0), cfg))
+        caches = tf.make_cache(cfg, b, s, dtype=jnp.bfloat16)
+        toks = jnp.zeros((b,), jnp.int32)
+        args = (params, caches, toks, jnp.int32(s - 1))
+        return Cell(arch_id, shape_name, kind, "lm", fn, args, None, (1,),
+                    _lm_flops(cfg, kind, b, s), {"cfg": cfg})
+    in_sh = (p_shard, _resolve(cache_logical), sl.sharding_for("batch"),
+             sl.sharding_for())
+    args = (serve_params_shape, cache_shape,
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return Cell(arch_id, shape_name, kind, "lm", fn, args, in_sh, (1,),
+                _lm_flops(cfg, kind, b, s), {"cfg": cfg})
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell_config(arch_id, cfg, sp, smoke, variant="base"):
+    """Adapt the family config to the cell's dataset (input dim, classes,
+    task level, edge chunking, §Perf layout variant)."""
+    d_feat = sp.get("d_feat", 0)
+    n_classes = sp.get("n_classes", 2)
+    repl: Dict[str, Any] = {}
+    big_e = (not smoke) and sp.get("n_edges", 0) > 2_000_000
+    if arch_id == "gcn-cora":
+        repl = dict(d_in=d_feat if d_feat else 16, n_classes=n_classes)
+    elif arch_id == "gin-tu":
+        repl = dict(d_in=d_feat if d_feat else 16, n_classes=n_classes,
+                    node_level="batch" not in sp)
+    elif arch_id == "schnet":
+        repl = dict(d_in=d_feat, n_targets=n_classes)
+    else:  # equiformer-v2
+        repl = dict(d_in=d_feat, n_targets=n_classes)
+    if big_e:
+        repl["edge_chunk"] = 1 << 20 if arch_id == "equiformer-v2" else 1 << 22
+    if variant == "opt":
+        repl["edge_layout"] = ("dst_ranged" if arch_id == "equiformer-v2"
+                               else "partitioned")
+    return dataclasses.replace(cfg, **repl)
+
+
+def _node_level(arch_id: str, sp) -> bool:
+    """GCN has no graph readout — always node-level (molecule labels are
+    broadcast to nodes); others are graph-level on packed-molecule cells."""
+    return arch_id == "gcn-cora" or "batch" not in sp
+
+
+def _gnn_abstract_batch(arch_id, sp, mult: int) -> Tuple[GraphBatch, Any]:
+    """ShapeDtypeStruct GraphBatch (+ its sharding tree) for a cell."""
+    if "batch" in sp:        # molecule: packed small graphs
+        n = sp["batch"] * sp["n_nodes"]
+        e = sp["batch"] * sp["n_edges"]
+        n_graphs = sp["batch"]
+    elif "batch_nodes" in sp:  # minibatch_lg: sampled block
+        layer = sp["batch_nodes"]
+        n, e = layer, 0
+        for f in sp["fanout"]:
+            layer *= f
+            e += layer
+            n += layer
+        n_graphs = 1
+    else:
+        n, e = sp["n_nodes"], sp["n_edges"]
+        n_graphs = 1
+    n, e = _pad_to(n, mult), _pad_to(e, mult)
+    d_feat = sp.get("d_feat", 0)
+    geo = arch_id in ("schnet", "equiformer-v2")
+    if not geo and d_feat == 0:
+        d_feat = 16      # gcn/gin need dense features (one-hot atom types)
+    node_level = _node_level(arch_id, sp)
+    sds = lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)
+    if d_feat:
+        feat = sds((n, d_feat), jnp.float32)
+        feat_sh = ("nodes", None)
+    else:
+        feat = sds((n,), jnp.int32)
+        feat_sh = ("nodes",)
+    batch = GraphBatch(
+        n_nodes=n, n_graphs=n_graphs,
+        src=sds((e,), jnp.int32), dst=sds((e,), jnp.int32),
+        node_feat=feat,
+        edge_feat=sds((e, 3), jnp.float32) if geo else None,
+        graph_ids=None if node_level else sds((n,), jnp.int32),
+        labels=sds((n if node_level else n_graphs,), jnp.int32),
+        train_mask=sds((n,), jnp.bool_) if node_level else None)
+    shard = GraphBatch(
+        n_nodes=n, n_graphs=n_graphs,
+        src=sl.sharding_for("edges"), dst=sl.sharding_for("edges"),
+        node_feat=sl.sharding_for(*feat_sh),
+        edge_feat=sl.sharding_for("edges", None) if geo else None,
+        graph_ids=None if node_level else sl.sharding_for("nodes"),
+        labels=sl.sharding_for("nodes") if node_level else sl.sharding_for(),
+        train_mask=sl.sharding_for("nodes") if node_level else None)
+    return batch, shard
+
+
+def _gnn_concrete_batch(arch_id, sp, smoke_scale=True):
+    import jax.nn as jnn
+    from ..data.graphs import make_graph_batch, synth_molecule_batch
+    geo = arch_id in ("schnet", "equiformer-v2")
+    if "batch" in sp:
+        g = synth_molecule_batch(batch=4 if smoke_scale else sp["batch"],
+                                 n_nodes=sp["n_nodes"],
+                                 n_edges=sp["n_edges"],
+                                 n_classes=sp["n_classes"])
+        if not geo:  # gcn/gin want dense features: one-hot atom types
+            g = dataclasses.replace(
+                g, node_feat=jnn.one_hot(g.node_feat % 16, 16))
+        if _node_level(arch_id, sp):  # gcn: broadcast graph labels to nodes
+            g = dataclasses.replace(
+                g, labels=jnp.take(g.labels, g.graph_ids), graph_ids=None,
+                train_mask=jnp.ones(g.n_nodes, bool))
+        return g
+    n = 64 if smoke_scale else sp["n_nodes"]
+    e = 256 if smoke_scale else sp["n_edges"]
+    return make_graph_batch(n, e, min(sp.get("d_feat", 16), 32)
+                            if smoke_scale else sp.get("d_feat", 16),
+                            n_classes=sp["n_classes"],
+                            with_geometry=True)
+
+
+def _gnn_flops(arch_id, cfg, n, e):
+    d = getattr(cfg, "d_hidden", 16)
+    if arch_id == "gcn-cora":
+        per = cfg.d_in * d * n + e * d + n * d * cfg.n_classes
+        return 3.0 * 2 * per
+    if arch_id == "gin-tu":
+        per = cfg.n_layers * (e * d + 2 * n * d * d)
+        return 3.0 * 2 * per
+    if arch_id == "schnet":
+        per = cfg.n_interactions * (e * (cfg.n_rbf * d + d * d)
+                                    + 3 * n * d * d)
+        return 3.0 * 2 * per
+    # equiformer: per-edge eSCN cost = rotation build/compose/apply +
+    # per-m dense SO(2) mixes over (l, channel)
+    rot_apply = 4 * d * sum((2 * l + 1) ** 2
+                            for l in range(cfg.l_max + 1))   # to+from frame
+    rot_build = 6 * sum((2 * l + 1) ** 3 for l in range(cfg.l_max + 1))
+    n0 = cfg.l_max + 1
+    so2 = 2 * (n0 * d) ** 2
+    for m in range(1, cfg.m_max + 1):
+        so2 += 4 * ((cfg.l_max + 1 - m) * d) ** 2
+    per_edge = rot_apply + rot_build + so2
+    per = cfg.n_layers * (e * per_edge + n * (cfg.l_max + 1) * 2 * d * d)
+    return 3.0 * per
+
+
+def _gnn_train_step(mod, cfg):
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: mod.loss_fn(p, batch, cfg))(state["params"])
+        new_p, new_opt, gnorm = adamw_update(
+            state["params"], grads, state["opt"], 1e-3, weight_decay=0.0)
+        return {"params": new_p, "opt": new_opt}, \
+            {"loss": loss, "gnorm": gnorm}
+    return step
+
+
+def _build_gnn_cell(arch_id, shape_name, mod, smoke, variant="base"):
+    base = mod.smoke_config() if smoke else mod.CONFIG
+    sp = dict(SHAPE_PARAMS["gnn"][shape_name])
+    model = GNN_MODULES[arch_id]
+    if smoke:
+        cfg = _gnn_cell_config(arch_id, base,
+                               {**sp, "d_feat": min(sp.get("d_feat", 16), 32),
+                                "n_classes": sp["n_classes"]}, smoke=True)
+        batch = _gnn_concrete_batch(arch_id, sp)
+        cfg = dataclasses.replace(
+            cfg, d_in=(batch.node_feat.shape[1]
+                       if batch.node_feat.ndim == 2 else 0))
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        state = {"params": params, "opt": adamw_init(params)}
+        fn = _gnn_train_step(model, cfg)
+        return Cell(arch_id, shape_name, "train", "gnn", fn, (state, batch),
+                    None, (0,),
+                    _gnn_flops(arch_id, cfg, batch.n_nodes,
+                               batch.src.shape[0]), {"cfg": cfg})
+    cfg = _gnn_cell_config(arch_id, base, sp, smoke=False, variant=variant)
+    mult = _mesh_total()
+    if variant == "opt":
+        # owner-bucketed edge layouts pad per-bucket to equal counts
+        sp = dict(sp)
+        if "n_edges" in sp:
+            sp["n_edges"] = int(sp["n_edges"] * 1.15)
+    batch, batch_sh = _gnn_abstract_batch(arch_id, sp, mult)
+    if batch.node_feat.ndim == 1:
+        cfg = dataclasses.replace(cfg, d_in=0)
+    params_shape = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    state_shape = {"params": params_shape, "opt": opt_shape}
+    repl = jax.tree.map(lambda _: sl.sharding_for(), params_shape)
+    state_sh = {"params": repl,
+                "opt": type(opt_shape)(
+                    m=jax.tree.map(lambda _: sl.sharding_for(), opt_shape.m),
+                    v=jax.tree.map(lambda _: sl.sharding_for(), opt_shape.v),
+                    count=sl.sharding_for())}
+    fn = _gnn_train_step(model, cfg)
+    return Cell(arch_id, shape_name, "train", "gnn", fn,
+                (state_shape, batch), (state_sh, batch_sh), (0,),
+                _gnn_flops(arch_id, cfg, batch.n_nodes, batch.src.shape[0]),
+                {"cfg": cfg})
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _dlrm_flops(cfg, kind, batch, n_cand=0):
+    dims = list(cfg.bot_mlp)
+    bot = sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    d_top = [cfg.n_interactions + cfg.bot_mlp[-1]] + list(cfg.top_mlp)
+    top = sum(d_top[i] * d_top[i + 1] for i in range(len(d_top) - 1))
+    inter = (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+    per = 2 * (bot + top + inter)
+    if kind == "train":
+        return 3.0 * batch * per
+    if kind == "retrieval":
+        return per + 2.0 * n_cand * cfg.embed_dim
+    return 1.0 * batch * per
+
+
+def _dlrm_train_step(cfg):
+    def step(state, dense, sparse, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: dlrm_mod.loss_fn(p, dense, sparse, labels, cfg))(
+                state["params"])
+        new_p, new_opt, gnorm = adamw_update(
+            state["params"], grads, state["opt"], 1e-3, weight_decay=0.0)
+        return {"params": new_p, "opt": new_opt}, \
+            {"loss": loss, "gnorm": gnorm}
+    return step
+
+
+def _build_recsys_cell(arch_id, shape_name, mod, smoke):
+    cfg = mod.smoke_config() if smoke else mod.CONFIG
+    sp = dict(SHAPE_PARAMS["recsys"][shape_name])
+    kind = sp["kind"]
+    b = 8 if smoke else sp.get("batch", 1)
+    n_cand = (1024 if smoke else sp.get("n_candidates", 0))
+
+    p_logical = dlrm_mod.param_shardings(cfg)
+    params_shape = jax.eval_shape(
+        lambda: dlrm_mod.init_params(jax.random.PRNGKey(0), cfg))
+
+    def concrete_inputs(rng):
+        dense = jnp.asarray(rng.normal(size=(b, cfg.n_dense)), jnp.float32)
+        sparse = jnp.asarray(
+            rng.integers(0, cfg.vocab_per_table, (b, cfg.n_sparse)),
+            jnp.int32)
+        return dense, sparse
+
+    if kind == "train":
+        fn = _dlrm_train_step(cfg)
+        if smoke:
+            rng = np.random.default_rng(0)
+            params = dlrm_mod.init_params(jax.random.PRNGKey(0), cfg)
+            state = {"params": params, "opt": adamw_init(params)}
+            dense, sparse = concrete_inputs(rng)
+            labels = jnp.asarray(rng.integers(0, 2, b), jnp.int32)
+            return Cell(arch_id, shape_name, kind, "recsys", fn,
+                        (state, dense, sparse, labels), None, (0,),
+                        _dlrm_flops(cfg, kind, b), {"cfg": cfg})
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        state_shape = {"params": params_shape, "opt": opt_shape}
+        psh = _resolve(p_logical)
+        state_sh = {"params": psh,
+                    "opt": type(opt_shape)(m=psh, v=psh,
+                                           count=sl.sharding_for())}
+        args = (state_shape,
+                jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32),
+                jax.ShapeDtypeStruct((b,), jnp.int32))
+        in_sh = (state_sh, sl.sharding_for("batch", None),
+                 sl.sharding_for("batch", None), sl.sharding_for("batch"))
+        return Cell(arch_id, shape_name, kind, "recsys", fn, args, in_sh,
+                    (0,), _dlrm_flops(cfg, kind, b), {"cfg": cfg})
+
+    if kind == "serve":
+        fn = functools.partial(dlrm_mod.forward, cfg=cfg)
+        if smoke:
+            rng = np.random.default_rng(0)
+            params = dlrm_mod.init_params(jax.random.PRNGKey(0), cfg)
+            dense, sparse = concrete_inputs(rng)
+            return Cell(arch_id, shape_name, kind, "recsys", fn,
+                        (params, dense, sparse), None, (),
+                        _dlrm_flops(cfg, kind, b), {"cfg": cfg})
+        args = (params_shape,
+                jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32))
+        in_sh = (_resolve(p_logical), sl.sharding_for("batch", None),
+                 sl.sharding_for("batch", None))
+        return Cell(arch_id, shape_name, kind, "recsys", fn, args, in_sh,
+                    (), _dlrm_flops(cfg, kind, b), {"cfg": cfg})
+
+    # retrieval
+    fn = functools.partial(dlrm_mod.retrieval_scores, cfg=cfg)
+    if smoke:
+        rng = np.random.default_rng(0)
+        params = dlrm_mod.init_params(jax.random.PRNGKey(0), cfg)
+        dense, sparse = concrete_inputs(rng)
+        cand = jnp.asarray(rng.integers(0, cfg.vocab_per_table, n_cand),
+                           jnp.int32)
+        return Cell(arch_id, shape_name, kind, "recsys", fn,
+                    (params, dense[:1], sparse[:1], cand), None, (),
+                    _dlrm_flops(cfg, kind, 1, n_cand), {"cfg": cfg})
+    n_cand = _pad_to(n_cand, _mesh_total())
+    args = (params_shape,
+            jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32),
+            jax.ShapeDtypeStruct((1, cfg.n_sparse), jnp.int32),
+            jax.ShapeDtypeStruct((n_cand,), jnp.int32))
+    in_sh = (_resolve(p_logical), sl.sharding_for(None, None),
+             sl.sharding_for(None, None), sl.sharding_for("cand"))
+    return Cell(arch_id, shape_name, kind, "recsys", fn, args, in_sh, (),
+                _dlrm_flops(cfg, kind, 1, n_cand), {"cfg": cfg})
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+class _OptLM:
+    """Wrap an arch module, replacing CONFIG with the §Perf-opt variant."""
+
+    def __init__(self, mod):
+        self._mod = mod
+        self.FAMILY = mod.FAMILY
+        self.CONFIG = dataclasses.replace(mod.CONFIG, attn_opt=True,
+                                          remat_policy="block_outs")
+        self.smoke_config = mod.smoke_config
+
+
+def build_cell(arch_id: str, shape_name: str, smoke: bool = False,
+               variant: str = "base") -> Cell:
+    """Must be called inside ``sl.axis_rules(mesh, rules_for(...))`` for
+    abstract (dry-run) cells; smoke cells need no mesh.
+
+    ``variant="opt"`` applies the §Perf beyond-baseline configuration:
+    LM — optimized attention schedule; GNN — owner-bucketed edge layouts.
+    """
+    mod = get_arch(arch_id)
+    if mod.FAMILY == "lm":
+        if variant == "opt":
+            mod = _OptLM(mod)
+        return _build_lm_cell(arch_id, shape_name, mod, smoke)
+    if mod.FAMILY == "gnn":
+        return _build_gnn_cell(arch_id, shape_name, mod, smoke,
+                               variant=variant)
+    return _build_recsys_cell(arch_id, shape_name, mod, smoke)
+
+
+def model_flops_for(arch_id: str, shape_name: str, mult: int = 256) -> float:
+    """Analytic MODEL_FLOPS for a full-size cell, mesh-free (``mult`` is
+    only the padding multiple for GNN node/edge counts)."""
+    mod = get_arch(arch_id)
+    sp = dict(SHAPE_PARAMS[mod.FAMILY][shape_name])
+    if mod.FAMILY == "lm":
+        return _lm_flops(mod.CONFIG, sp["kind"], sp["global_batch"],
+                         sp["seq_len"])
+    if mod.FAMILY == "gnn":
+        cfg = _gnn_cell_config(arch_id, mod.CONFIG, sp, smoke=False)
+        if "batch" in sp:
+            n, e = sp["batch"] * sp["n_nodes"], sp["batch"] * sp["n_edges"]
+        elif "batch_nodes" in sp:
+            layer, n, e = sp["batch_nodes"], sp["batch_nodes"], 0
+            for f in sp["fanout"]:
+                layer *= f
+                e += layer
+                n += layer
+        else:
+            n, e = sp["n_nodes"], sp["n_edges"]
+        return _gnn_flops(arch_id, cfg, _pad_to(n, mult), _pad_to(e, mult))
+    kind = sp["kind"]
+    return _dlrm_flops(mod.CONFIG, kind, sp.get("batch", 1),
+                       _pad_to(sp.get("n_candidates", 0), mult)
+                       if kind == "retrieval" else 0)

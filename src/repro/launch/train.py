@@ -1,0 +1,80 @@
+"""Production training driver: any arch, fault-tolerant, resumable.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+Wires the cell builder, the checkpoint manager (async, keep-last-k), the
+step monitor (straggler/hang verdicts), deterministic data resume, and —
+on a real cluster — the production mesh.  In this container it runs the
+reduced smoke config on the 1-device mesh; the full config path is
+identical modulo the mesh constructor.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import shardlib as sl
+from ..checkpoint import CheckpointManager
+from ..configs import get_arch
+from ..ft import StepMonitor
+from .mesh import make_smoke_mesh
+from .steps import build_cell, rules_for
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    mod = get_arch(args.arch)
+    shape = args.shape
+    if mod.FAMILY == "gnn" and shape == "train_4k":
+        shape = "full_graph_sm"
+    if mod.FAMILY == "recsys" and shape == "train_4k":
+        shape = "train_batch"
+
+    mesh = make_smoke_mesh()
+    mgr = CheckpointManager(args.ckpt_dir, keep_last=3)
+    mon = StepMonitor()
+
+    with sl.axis_rules(mesh, rules_for(args.arch, shape, mesh)):
+        cell = build_cell(args.arch, shape, smoke=True)
+        step_fn = jax.jit(cell.fn, donate_argnums=cell.donate_argnums)
+        state, *batch_args = cell.args
+
+        start = 0
+        if mgr.latest_step() is not None:
+            state, extra = mgr.restore(state)
+            start = int(extra["step"]) + 1
+            print(f"resumed from step {start - 1}")
+
+        for step in range(start, args.steps):
+            mon.start_step()
+            state, metrics = step_fn(state, *batch_args)
+            loss = float(metrics["loss"])
+            verdict = mon.end_step()
+            if verdict != "ok":
+                print(f"[ft] step {step}: {verdict} "
+                      f"(median {mon.median*1e3:.0f} ms)")
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"({mon.median*1e3:.0f} ms/step)")
+            if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
+                mgr.save(step, state)
+        mgr.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: LM transformers (dense + MoE), GNN family, DLRM.
+
+Every model is a pair of pure functions — ``init(rng, cfg)`` returning a
+param pytree and ``apply``-style step functions — annotated with *logical*
+sharding axes via :mod:`repro.shardlib`, so the same code runs unsharded in
+tests and under the production mesh in the dry-run.
+"""

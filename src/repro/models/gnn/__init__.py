@@ -1,0 +1,10 @@
+"""GNN family: GCN, GIN, SchNet, EquiformerV2 (eSCN).
+
+All message passing is built on ``jnp.take`` (gather by edge endpoint) +
+``jax.ops.segment_sum``-style scatter reductions — JAX has no native sparse
+SpMM, so the edge-index formulation IS the substrate (see kernel taxonomy
+§GNN).  Edge arrays are padded with a sentinel node (id == n_nodes) whose
+row is sliced off after every scatter, keeping shapes static.
+"""
+from .common import GraphBatch, segment_softmax, gather_scatter_sum  # noqa: F401
+from . import gcn, gin, schnet, equiformer_v2  # noqa: F401

@@ -1,0 +1,235 @@
+"""Shared GNN substrate: padded graph batches + segment primitives."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ... import shardlib as sl
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Static-shape graph (or packed batch of graphs).
+
+    ``src``/``dst`` are edge endpoints; padding edges point at the sentinel
+    node ``n_nodes`` (one scrap row appended to every node tensor).
+    ``graph_ids`` maps nodes to graphs for packed molecule batches
+    (sentinel graph == n_graphs).  Registered as a jax pytree (counts are
+    static metadata) so it can be a jit argument.
+    """
+    n_nodes: int
+    n_graphs: int
+    src: jnp.ndarray              # [E] int32
+    dst: jnp.ndarray              # [E] int32
+    node_feat: jnp.ndarray        # [N, F] (or int atom types for schnet)
+    edge_feat: Optional[jnp.ndarray] = None    # [E, ...] dist / vectors
+    graph_ids: Optional[jnp.ndarray] = None    # [N] int32
+    labels: Optional[jnp.ndarray] = None       # [N] or [G]
+    train_mask: Optional[jnp.ndarray] = None   # [N] bool
+
+
+jax.tree_util.register_dataclass(
+    GraphBatch,
+    data_fields=["src", "dst", "node_feat", "edge_feat", "graph_ids",
+                 "labels", "train_mask"],
+    meta_fields=["n_nodes", "n_graphs"])
+
+
+def edge_chunks(n_chunks: int, *arrays, sentinel: int = 0):
+    """Reshape [E, ...] edge arrays to [n_chunks, E/n_chunks, ...] (padding
+    int arrays with ``sentinel``, float arrays with 0)."""
+    e = arrays[0].shape[0]
+    per = -(-e // n_chunks)
+    pad = per * n_chunks - e
+    out = []
+    for a in arrays:
+        if pad:
+            cv = sentinel if jnp.issubdtype(a.dtype, jnp.integer) else 0
+            widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+            a = jnp.pad(a, widths, constant_values=cv)
+        out.append(a.reshape((n_chunks, per) + a.shape[1:]))
+    return out
+
+
+def chunked_scatter_sum(edge_fn, n_chunks: int, arrays, n: int,
+                        out_shape, dtype, dst_ranged: bool = False):
+    """Accumulate scatter-sums over edge chunks.
+
+    ``edge_fn(*chunk_arrays) -> (values [e_c, ...], dst [e_c])``; values are
+    scatter-added into an [n(+1 scrap), ...] accumulator via lax.scan, so
+    the per-edge intermediate never exceeds one chunk.
+
+    ``dst_ranged``: edges are pre-bucketed so chunk i's destinations fall in
+    node range [i·(n/n_chunks), (i+1)·(n/n_chunks)) — the HoD level-blocked
+    layout.  Each chunk then scatters into a range-sized local buffer that
+    is written once via dynamic_update_slice, instead of re-touching the
+    whole [n, ...] accumulator every iteration (n_chunks× less traffic, and
+    SPMD keeps the write local to the range's owner).  Chunk arrays are
+    sharding-annotated inside the body so the per-edge work stays sharded
+    through the scan.
+    """
+    from ... import shardlib as sl
+    chunked = edge_chunks(n_chunks, *arrays, sentinel=n)
+
+    if not dst_ranged:
+        # Remat the per-chunk edge work: without it, backward stores every
+        # chunk's [e_c, F] intermediates (hundreds of GB/device on the
+        # 62M-edge cells); with it, backward recomputes the chunk and only
+        # the [n, F] carries persist.
+        @jax.checkpoint
+        def body(acc, chunk):
+            vals, dst = edge_fn(*chunk)
+            return acc.at[dst].add(vals.astype(dtype)), None
+
+        init = jnp.zeros((n + 1,) + tuple(out_shape), dtype)
+        acc, _ = jax.lax.scan(body, init, tuple(chunked))
+        return acc[:n]
+
+    rng_sz = -(-n // n_chunks)
+
+    # Each chunk owns one contiguous destination range, so no carry is
+    # needed at all: every iteration *returns* its range's buffer and the
+    # stacked scan outputs concatenate into the full node tensor — zero
+    # cross-chunk reduction, zero accumulator re-reads.  (No body remat:
+    # callers remat at layer level — body remat would double the backward
+    # collective traffic; measured in §Perf iter 3.)
+    def body(_, xs):
+        i, chunk = xs
+        chunk = tuple(sl.shard(c, "edges", *([None] * (c.ndim - 1)))
+                      for c in chunk)
+        vals, dst = edge_fn(*chunk)
+        local = dst - i * rng_sz
+        ok = (local >= 0) & (local < rng_sz)
+        local = jnp.where(ok, local, rng_sz)      # scrap row
+        buf = jnp.zeros((rng_sz + 1,) + tuple(out_shape), dtype)
+        buf = buf.at[local].add(vals.astype(dtype))
+        return None, buf[:rng_sz]
+
+    idx = jnp.arange(n_chunks, dtype=jnp.int32)
+    _, bufs = jax.lax.scan(body, None, (idx, tuple(chunked)))
+    return bufs.reshape((rng_sz * n_chunks,) + tuple(out_shape))[:n]
+
+
+def partitioned_aggregate(x, arrays, edge_fn, n: int, out_shape, dtype,
+                          n_chunks: int = 1):
+    """Owner-partitioned message passing inside a shard_map.
+
+    Precondition (data layout): ``arrays`` edge arrays are reordered so
+    shard k holds exactly the edges whose *destination* lives in node shard
+    k (``bucket_edges_by_dst``) — the distributed analogue of HoD's
+    file-order-equals-traversal-order layout.
+
+    Inside each shard: one all-gather of the (small) node features, a local
+    gather + ``edge_fn`` + scatter into the local node slice — the per-layer
+    communication is exactly one all-gather forward (+ its reduce-scatter
+    transpose backward), replacing the per-chunk full-buffer all-reduces the
+    generic SPMD scatter lowers to.
+
+    ``edge_fn(x_full, *chunk_arrays) -> (values, global_dst)``.
+    """
+    from ... import shardlib as sl
+    from jax.sharding import PartitionSpec as P
+    axes = sl._live_axes("nodes")
+    mesh = sl.current_mesh()
+
+    def inner(x_l, *arr_l):
+        n_local = x_l.shape[0]
+        offset = sl.axis_index(axes) * n_local
+        x_full = sl.all_gather(x_l, axes, axis=0)
+
+        @jax.checkpoint
+        def chunk_body(acc, chunk):
+            vals, dst = edge_fn(x_full, *chunk)
+            local = dst - offset
+            ok = (local >= 0) & (local < n_local)
+            local = jnp.where(ok, local, n_local)
+            return acc.at[local].add(
+                vals * ok.reshape((-1,) + (1,) * (vals.ndim - 1))
+                .astype(vals.dtype)).astype(dtype), None
+
+        init = jnp.zeros((n_local + 1,) + tuple(out_shape), dtype)
+        if n_chunks <= 1:
+            acc, _ = chunk_body(init, arr_l)
+        else:
+            chunked = edge_chunks(n_chunks, *arr_l, sentinel=n)
+            acc, _ = jax.lax.scan(chunk_body, init, tuple(chunked))
+        return acc[:n_local]
+
+    if mesh is None or not axes:
+        return inner(x, *arrays)
+
+    ax = axes if len(axes) > 1 else axes[0]
+    in_specs = (P(ax, *([None] * (x.ndim - 1))),) + tuple(
+        P(ax, *([None] * (a.ndim - 1))) for a in arrays)
+    fn = sl.maybe_shard_map(
+        inner, in_specs=in_specs,
+        out_specs=P(ax, *([None] * len(out_shape))))
+    return fn(x, *arrays)
+
+
+def scatter_sum(values: jnp.ndarray, index: jnp.ndarray,
+                n: int) -> jnp.ndarray:
+    """segment-sum of ``values`` [E, ...] into ``n`` rows (+1 scrap row)."""
+    out_shape = (n + 1,) + values.shape[1:]
+    out = jnp.zeros(out_shape, values.dtype).at[index].add(values)
+    return out[:n]
+
+
+def scatter_max(values: jnp.ndarray, index: jnp.ndarray, n: int,
+                fill: float = -jnp.inf) -> jnp.ndarray:
+    out_shape = (n + 1,) + values.shape[1:]
+    out = jnp.full(out_shape, fill, values.dtype).at[index].max(values)
+    return out[:n]
+
+
+def gather_scatter_sum(x: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                       n: int, edge_weight: Optional[jnp.ndarray] = None):
+    """The SpMM core: out[dst] += w * x[src], static shapes, sentinel-safe."""
+    msgs = jnp.take(x, src, axis=0, fill_value=0)
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None].astype(msgs.dtype)
+    msgs = sl.shard(msgs, "edges", None)
+    return scatter_sum(msgs, dst, n)
+
+
+def segment_softmax(logits: jnp.ndarray, index: jnp.ndarray,
+                    n: int) -> jnp.ndarray:
+    """Softmax over edges grouped by ``index`` (per-destination)."""
+    m = scatter_max(logits, index, n)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - jnp.take(m, index, axis=0, fill_value=0))
+    z = scatter_sum(p, index, n)
+    z = jnp.take(jnp.maximum(z, 1e-30), index, axis=0, fill_value=1.0)
+    return p / z
+
+
+def degrees(index: jnp.ndarray, n: int) -> jnp.ndarray:
+    return scatter_sum(jnp.ones(index.shape[0], jnp.float32), index, n)
+
+
+def graph_readout(x: jnp.ndarray, graph_ids: jnp.ndarray, n_graphs: int,
+                  op: str = "sum") -> jnp.ndarray:
+    s = scatter_sum(x, graph_ids, n_graphs)
+    if op == "sum":
+        return s
+    cnt = jnp.maximum(degrees(graph_ids, n_graphs), 1.0)
+    return s / cnt[:, None]
+
+
+def mlp(x, weights, act=jax.nn.relu):
+    """weights: list of (W, b); activation between layers, none after last."""
+    for i, (w, b) in enumerate(weights):
+        x = x @ w + b
+        if i < len(weights) - 1:
+            x = act(x)
+    return x
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    from ..layers import dense_init
+    ks = jax.random.split(key, len(dims) - 1)
+    return [[dense_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype),
+             jnp.zeros((dims[i + 1],), dtype)] for i in range(len(dims) - 1)]

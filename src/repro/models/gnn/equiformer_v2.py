@@ -1,0 +1,368 @@
+"""EquiformerV2 (arXiv:2306.12059) — eSCN-style equivariant graph attention.
+
+The O(L⁶) Clebsch-Gordan tensor product is replaced (as in eSCN /
+EquiformerV2) by rotating each edge's features into a frame aligned with
+the edge axis, where the tensor product collapses to SO(2) convolutions
+over the azimuthal index m, truncated at ``m_max``.
+
+TPU adaptation of the rotation math: Wigner little-d matrices are *not*
+table-interpolated (the GPU implementation memoizes grids); instead we use
+the exact spectral form  d^l(β) = Re[P_l diag(e^{-imβ}) P_l†]  with
+P_l = T_l U_l (real-basis transform × eigenvectors of J_y), which unrolls
+into a cos/sin einsum against tiny precomputed constant tensors:
+
+    d^l(β)[e] = Σ_m cos(m·β_e)·A_l[m] + sin(m·β_e)·B_l[m]
+
+— dense, branch-free VPU work, no gathers.  z-rotations use the same
+machinery with P_l = T_l.  Constants are computed once in numpy (complex),
+baked into the HLO as f32.
+
+Per layer: rotate source features to the edge frame → SO(2) conv
+(m=0 full l-mix; |m|≤m_max complex-pair mixes) modulated by an
+edge-distance filter → multi-head attention logits from the m=0 part →
+segment-softmax over incoming edges → rotate back → scatter-sum →
+equivariant RMS norm + gated nonlinearity + residual.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ... import shardlib as sl
+from .common import GraphBatch, graph_readout, mlp, mlp_init, scatter_sum, \
+    segment_softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 64
+    cutoff: float = 10.0
+    d_in: int = 0
+    n_atom_types: int = 100
+    n_targets: int = 1
+    edge_chunk: int = 0
+    # "arbitrary" | "dst_ranged": edges bucketed into contiguous destination
+    # ranges (HoD's level-blocked layout) — each scan chunk writes one node
+    # slice instead of re-touching the whole [N, 49, C] accumulator, and
+    # chunk arrays carry explicit sharding so SPMD never replicates the
+    # per-edge work across the mesh (see EXPERIMENTS.md §Perf).
+    edge_layout: str = "arbitrary"
+    logit_cap: float = 5.0      # soft-cap => chunk-safe exp (no max pass)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_coef(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+# ---------------------------------------------------------------------------
+# Wigner rotation constants (numpy, cached per l_max)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4)
+def _rotation_constants(l_max: int):
+    """Per l: (A, B) with d^l(β) = Σ_m cos(mβ)A[m] + sin(mβ)B[m], and the
+    analogous (Az, Bz) for z-rotations. All real f32, shapes [2l+1, D, D]."""
+    out = []
+    for l in range(l_max + 1):
+        d = 2 * l + 1
+        m = np.arange(-l, l + 1)
+        # J_y in the complex |l,m> basis.
+        jp = np.zeros((d, d), complex)   # J+ |m> = c+ |m+1>
+        for i, mm in enumerate(m[:-1]):
+            jp[i + 1, i] = np.sqrt(l * (l + 1) - mm * (mm + 1))
+        jm = jp.conj().T
+        jy = (jp - jm) / 2j
+        evals, u = np.linalg.eigh(jy)    # evals ≈ -l..l
+        # Real SH basis transform T (rows: real index m'=-l..l).
+        t = np.zeros((d, d), complex)
+        for i, mm in enumerate(m):
+            j_pos, j_neg = l + abs(mm), l - abs(mm)
+            if mm == 0:
+                t[i, l] = 1.0
+            elif mm > 0:
+                t[i, j_pos] = (-1) ** mm / np.sqrt(2)
+                t[i, j_neg] = 1 / np.sqrt(2)
+            else:
+                t[i, j_pos] = 1j * (-1) ** abs(mm) / np.sqrt(2) * -1
+                t[i, j_neg] = 1j / np.sqrt(2)
+        # d(β) = T U diag(e^{-i λ β}) (T U)^† ; λ = eigenvalue.
+        p = t @ u
+        a = np.empty((d, d, d), np.float32)
+        b = np.empty((d, d, d), np.float32)
+        for k in range(d):
+            outer = np.outer(p[:, k], p[:, k].conj())
+            a[k] = outer.real.astype(np.float32)
+            b[k] = outer.imag.astype(np.float32)
+        lam = evals.astype(np.float32)   # multipliers for β
+        # z-rotation: same with P = T, eigenvalues = m.
+        az = np.empty((d, d, d), np.float32)
+        bz = np.empty((d, d, d), np.float32)
+        for k in range(d):
+            outer = np.outer(t[:, k], t[:, k].conj())
+            az[k] = outer.real.astype(np.float32)
+            bz[k] = outer.imag.astype(np.float32)
+        lamz = m.astype(np.float32)
+        out.append((a, b, lam, az, bz, lamz))
+    return out
+
+
+def _edge_rotations(vec: jnp.ndarray, l_max: int) -> List[jnp.ndarray]:
+    """Per l: R_l [E, D, D] rotating each edge's frame so the edge direction
+    lies along +z:  R = d(-θ) · z(-φ)."""
+    x, y, z = vec[:, 0], vec[:, 1], vec[:, 2]
+    r = jnp.sqrt(jnp.maximum(x * x + y * y + z * z, 1e-12))
+    theta = jnp.arccos(jnp.clip(z / r, -1.0, 1.0))
+    phi = jnp.arctan2(y, x)
+    consts = _rotation_constants(l_max)
+    rots = []
+    for l in range(l_max + 1):
+        a, b, lam, az, bz, lamz = consts[l]
+        cb = jnp.cos(lam[None, :] * (-theta[:, None]))
+        sb = jnp.sin(lam[None, :] * (-theta[:, None]))
+        d_beta = jnp.einsum("ek,kij->eij", cb, a) \
+            + jnp.einsum("ek,kij->eij", sb, b)
+        ca = jnp.cos(lamz[None, :] * (-phi[:, None]))
+        sa = jnp.sin(lamz[None, :] * (-phi[:, None]))
+        d_alpha = jnp.einsum("ek,kij->eij", ca, az) \
+            + jnp.einsum("ek,kij->eij", sa, bz)
+        rots.append(jnp.einsum("eij,ejk->eik", d_beta, d_alpha))
+    return rots
+
+
+def _block_apply(rots, feats, l_max, transpose=False):
+    """feats [E, n_coef, C]; apply block-diag rotation per l."""
+    outs = []
+    for l in range(l_max + 1):
+        lo = l * l
+        blk = feats[:, lo: lo + 2 * l + 1]
+        r = rots[l]
+        eq = "eji,ejc->eic" if transpose else "eij,ejc->eic"
+        outs.append(jnp.einsum(eq, r, blk))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _so2_shapes(cfg: EquiformerV2Config):
+    """Row counts feeding each m-channel of the SO(2) conv."""
+    n0 = cfg.l_max + 1
+    rows = {0: n0}
+    for m in range(1, cfg.m_max + 1):
+        rows[m] = cfg.l_max + 1 - m
+    return rows
+
+
+def init_params(key, cfg: EquiformerV2Config) -> Dict[str, Any]:
+    from ..layers import dense_init
+    c = cfg.d_hidden
+    rows = _so2_shapes(cfg)
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[0], (max(cfg.n_atom_types, cfg.d_in, 1), c),
+                            dtype=cfg.dtype),
+        "head": mlp_init(ks[1], [c, c, cfg.n_targets], cfg.dtype),
+    }
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[4 + i], 8)
+        lp = {
+            "w0": dense_init(lk[0], (rows[0] * c, rows[0] * c), dtype=cfg.dtype),
+            "filter": mlp_init(lk[1], [cfg.n_rbf, c, c], cfg.dtype),
+            "attn": dense_init(lk[2], (c, cfg.n_heads), dtype=cfg.dtype),
+            "gate": dense_init(lk[3], (c, c), dtype=cfg.dtype),
+            "self": [dense_init(k, (c, c), dtype=cfg.dtype)
+                     for k in jax.random.split(lk[4], cfg.l_max + 1)],
+        }
+        for m in range(1, cfg.m_max + 1):
+            km = jax.random.split(lk[4 + m], 2)
+            lp[f"w{m}r"] = dense_init(km[0], (rows[m] * c, rows[m] * c),
+                                      dtype=cfg.dtype)
+            lp[f"w{m}i"] = dense_init(km[1], (rows[m] * c, rows[m] * c),
+                                      dtype=cfg.dtype)
+        layers.append(lp)
+    params["layers"] = layers
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _m_index(l_max: int, m: int, sign: int) -> np.ndarray:
+    """Coefficient rows (l ≥ |m|) of azimuthal index ±m, real basis."""
+    return np.array([l * l + l + sign * m for l in range(abs(m), l_max + 1)],
+                    np.int32)
+
+
+def _so2_conv(feats, lp, cfg: EquiformerV2Config):
+    """feats [E, n_coef, C] in edge-aligned frames -> same shape out."""
+    e = feats.shape[0]
+    c = cfg.d_hidden
+    out = jnp.zeros_like(feats)
+    # m = 0: dense mix across (l, channel).
+    idx0 = _m_index(cfg.l_max, 0, +1)
+    x0 = feats[:, idx0].reshape(e, -1)
+    y0 = (x0 @ lp["w0"]).reshape(e, len(idx0), c)
+    out = out.at[:, idx0].set(y0)
+    # 0 < m <= m_max: SO(2)-equivariant complex pair mixing.
+    for m in range(1, cfg.m_max + 1):
+        ip = _m_index(cfg.l_max, m, +1)
+        im = _m_index(cfg.l_max, m, -1)
+        xr = feats[:, ip].reshape(e, -1)
+        xi = feats[:, im].reshape(e, -1)
+        yr = xr @ lp[f"w{m}r"] - xi @ lp[f"w{m}i"]
+        yi = xr @ lp[f"w{m}i"] + xi @ lp[f"w{m}r"]
+        out = out.at[:, ip].set(yr.reshape(e, len(ip), c))
+        out = out.at[:, im].set(yi.reshape(e, len(im), c))
+    # rows with |m| > m_max stay zero — the eSCN truncation.
+    return out
+
+
+def _equiv_norm(x, l_max):
+    """RMS over (m, channel) per l block, per node."""
+    outs = []
+    for l in range(l_max + 1):
+        lo = l * l
+        blk = x[:, lo: lo + 2 * l + 1]
+        rms = jnp.sqrt(jnp.mean(jnp.square(blk), axis=(1, 2),
+                                keepdims=True) + 1e-6)
+        outs.append(blk / rms)
+    return jnp.concatenate(outs, axis=1)
+
+
+def rbf_expand(dist, cfg):
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf, dtype=jnp.float32)
+    gamma = (cfg.n_rbf / cfg.cutoff) ** 2 * 0.5
+    return jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2)
+
+
+def _edge_message(x, lp, cfg, src, vec, capped_only=False):
+    """Per-edge pipeline: gather → rotate → SO(2) conv (m=0 only when
+    ``capped_only``) → distance filter → soft-capped attention logits."""
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, axis=-1), 1e-12))
+    rots = _edge_rotations(vec, cfg.l_max)
+    rbf = rbf_expand(dist, cfg)
+    src_f = jnp.take(x, src, axis=0, fill_value=0)           # [e, 49, C]
+    f_edge = _block_apply(rots, src_f, cfg.l_max)
+    filt = mlp(rbf, lp["filter"], act=jax.nn.silu)           # [e, C]
+    if capped_only:
+        # m=0 rows only — enough for the attention logits.
+        idx0 = _m_index(cfg.l_max, 0, +1)
+        x0 = f_edge[:, idx0].reshape(f_edge.shape[0], -1)
+        y0 = (x0 @ lp["w0"]).reshape(f_edge.shape[0], len(idx0), cfg.d_hidden)
+        m0 = y0[:, 0] * filt
+        logits = m0 @ lp["attn"]
+    else:
+        msg = _so2_conv(f_edge, lp, cfg) * filt[:, None, :]
+        logits = msg[:, 0] @ lp["attn"]
+    cap = cfg.logit_cap
+    logits = cap * jnp.tanh(logits / cap)                    # soft-cap
+    if capped_only:
+        return logits
+    return msg, logits, rots
+
+
+def forward(params, g: GraphBatch, cfg: EquiformerV2Config) -> jnp.ndarray:
+    n, c = g.n_nodes, cfg.d_hidden
+    vec = g.edge_feat.astype(jnp.float32).reshape(-1, 3)
+    e = g.src.shape[0]
+    n_chunks = (-(-e // cfg.edge_chunk)
+                if cfg.edge_chunk and e > cfg.edge_chunk else 1)
+
+    if cfg.d_in == 0:
+        x0 = jnp.take(params["embed"], g.node_feat.astype(jnp.int32), axis=0)
+    else:
+        x0 = g.node_feat.astype(cfg.dtype) @ params["embed"][: cfg.d_in]
+    x = jnp.zeros((n, cfg.n_coef, c), cfg.dtype).at[:, 0].set(x0)
+    x = sl.shard(x, "nodes", None, None)
+
+    def layer_fn(x, lp):
+        if n_chunks == 1:
+            msg, logits, rots = _edge_message(x, lp, cfg, g.src, vec)
+            denom = scatter_sum(jnp.exp(logits), g.dst, n)       # [N, H]
+            alpha = jnp.exp(logits) / jnp.take(
+                jnp.maximum(denom, 1e-30), g.dst, axis=0, fill_value=1.0)
+            alpha = jnp.repeat(alpha, c // cfg.n_heads, axis=-1)  # [E, C]
+            msg = msg * alpha[:, None, :]
+            msg = _block_apply(rots, msg, cfg.l_max, transpose=True)
+            agg = scatter_sum(msg, g.dst, n)
+        else:
+            from .common import chunked_scatter_sum
+            ranged = cfg.edge_layout == "dst_ranged"
+            # pass 1: soft-capped exp-sum per destination (m=0 conv only)
+            denom = chunked_scatter_sum(
+                lambda s, d, v: (jnp.exp(_edge_message(
+                    x, lp, cfg, s, v, capped_only=True)), d),
+                n_chunks, (g.src, g.dst, vec), n, (cfg.n_heads,),
+                jnp.float32, dst_ranged=ranged)
+            denom = jnp.maximum(denom, 1e-30)
+
+            # pass 2: full message, normalized, rotated back, scattered
+            def edge_op(s, d, v):
+                m, lo, rots_c = _edge_message(x, lp, cfg, s, v)
+                al = jnp.exp(lo) / jnp.take(denom, d, axis=0, fill_value=1.0)
+                al = jnp.repeat(al, c // cfg.n_heads, axis=-1)
+                m = m * al[:, None, :]
+                return _block_apply(rots_c, m, cfg.l_max, transpose=True), d
+
+            agg = chunked_scatter_sum(edge_op, n_chunks,
+                                      (g.src, g.dst, vec), n,
+                                      (cfg.n_coef, c), x.dtype,
+                                      dst_ranged=ranged)
+        agg = _equiv_norm(agg, cfg.l_max)
+        # node update: per-l channel mix + scalar-gated nonlinearity
+        ups = []
+        for l in range(cfg.l_max + 1):
+            lo = l * l
+            ups.append(agg[:, lo: lo + 2 * l + 1] @ lp["self"][l])
+        up = jnp.concatenate(ups, axis=1)
+        gate = jax.nn.sigmoid(up[:, 0] @ lp["gate"])         # [N, C]
+        scal = jax.nn.silu(up[:, :1])
+        rest = up[:, 1:] * gate[:, None, :]
+        x = x + jnp.concatenate([scal, rest], axis=1)
+        return sl.shard(x, "nodes", None, None)
+
+    # NOTE on remat (§Perf iter-3, measured and refuted): wrapping layer_fn
+    # in jax.checkpoint halves nothing here — the backward recompute re-runs
+    # both chunk scans and doubles the scatter-transpose all-reduce traffic
+    # (43.7 -> 87 TB/dev) while residual temp grows.  The real fix for both
+    # temp and collectives is src-side ownership + all-to-all message
+    # delivery (designed in EXPERIMENTS.md §Perf A).
+    for lp in params["layers"]:
+        x = layer_fn(x, lp)
+    return x
+
+
+def predict(params, g: GraphBatch, cfg: EquiformerV2Config) -> jnp.ndarray:
+    x = forward(params, g, cfg)
+    inv = mlp(x[:, 0], params["head"], act=jax.nn.silu)      # invariant head
+    if g.graph_ids is None:
+        return inv
+    return graph_readout(inv, g.graph_ids, g.n_graphs, op="mean")
+
+
+def loss_fn(params, g: GraphBatch, cfg: EquiformerV2Config) -> jnp.ndarray:
+    pred = predict(params, g, cfg)
+    if g.labels.dtype in (jnp.int32, jnp.int64):
+        logp = jax.nn.log_softmax(pred, axis=-1)
+        nll = -jnp.take_along_axis(logp, g.labels[:, None], axis=-1)[:, 0]
+        if g.train_mask is not None and g.graph_ids is None:
+            return (nll * g.train_mask).sum() / jnp.maximum(
+                g.train_mask.sum(), 1)
+        return nll.mean()
+    target = g.labels.astype(jnp.float32).reshape(pred.shape)
+    return jnp.mean((pred - target) ** 2)

@@ -1,0 +1,82 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907): 2-layer, symmetric-normalized.
+
+out = Ã ReLU(Ã X W1) W2,  Ã = D^-1/2 (A + I) D^-1/2 — expressed as
+gather→scale→scatter over the edge list (self loops added by the caller or
+handled here via the identity term).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ... import shardlib as sl
+from .common import GraphBatch, degrees, gather_scatter_sum, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    norm: str = "sym"
+    aggregator: str = "mean"   # paper config: sym-norm mean
+    edge_chunk: int = 0        # >0: max edges per scan chunk (big graphs)
+    # "arbitrary" | "partitioned" (edges pre-bucketed by dst owner; one
+    # all-gather per layer instead of per-chunk all-reduces — see §Perf)
+    edge_layout: str = "arbitrary"
+    dtype: Any = jnp.float32
+
+
+def init_params(key, cfg: GCNConfig) -> Dict[str, Any]:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    return {"layers": mlp_init(key, dims, cfg.dtype)}
+
+
+def forward(params, g: GraphBatch, cfg: GCNConfig) -> jnp.ndarray:
+    n = g.n_nodes
+    deg = degrees(g.dst, n) + 1.0                      # +1: self loop
+    inv_sqrt = jax.lax.rsqrt(deg)
+    coef = (jnp.take(inv_sqrt, g.src, fill_value=0.0)
+            * jnp.take(inv_sqrt, g.dst, fill_value=0.0))
+    x = g.node_feat.astype(cfg.dtype)
+    x = sl.shard(x, "nodes", None)
+    e = g.src.shape[0]
+    n_chunks = (-(-e // cfg.edge_chunk)
+                if cfg.edge_chunk and e > cfg.edge_chunk else 1)
+    for i, (w, b) in enumerate(params["layers"]):
+        x = x @ w                                       # transform first:
+        x = sl.shard(x, "nodes", None)                  # smaller SpMM width
+        if cfg.edge_layout == "partitioned":
+            from .common import partitioned_aggregate
+            agg = partitioned_aggregate(
+                x, (g.src, g.dst, coef),
+                lambda xf, s, d, c: (jnp.take(xf, s, axis=0, fill_value=0)
+                                     * c[:, None], d),
+                n, x.shape[1:], x.dtype, n_chunks=n_chunks)
+        elif n_chunks == 1:
+            agg = gather_scatter_sum(x, g.src, g.dst, n, edge_weight=coef)
+        else:
+            from .common import chunked_scatter_sum
+            agg = chunked_scatter_sum(
+                lambda s, d, c: (jnp.take(x, s, axis=0, fill_value=0)
+                                 * c[:, None], d),
+                n_chunks, (g.src, g.dst, coef), n, x.shape[1:], x.dtype)
+        x = agg + x * inv_sqrt[:, None] ** 2 + b        # self-loop term
+        x = sl.shard(x, "nodes", None)
+        if i < len(params["layers"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params, g: GraphBatch, cfg: GCNConfig) -> jnp.ndarray:
+    logits = forward(params, g, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, g.labels[:, None], axis=-1)[:, 0]
+    mask = (g.train_mask if g.train_mask is not None
+            else jnp.ones_like(nll, dtype=bool))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)

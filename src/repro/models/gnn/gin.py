@@ -1,0 +1,87 @@
+"""GIN (Xu et al., arXiv:1810.00826): 5 layers, sum aggregator, learnable ε.
+
+h_v' = MLP((1 + ε) h_v + Σ_{u∈N(v)} h_u); graph-level tasks read out with a
+sum pool per layer (jumping knowledge, as in the paper's TU setup).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ... import shardlib as sl
+from .common import (GraphBatch, gather_scatter_sum, graph_readout, mlp,
+                     mlp_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_in: int = 64
+    d_hidden: int = 64
+    n_classes: int = 2
+    node_level: bool = False      # node classification (full-graph shapes)
+    edge_chunk: int = 0
+    edge_layout: str = "arbitrary"   # | "partitioned" (see gcn.py)
+    dtype: Any = jnp.float32
+
+
+def init_params(key, cfg: GINConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        layers.append({
+            "mlp": mlp_init(ks[i], [d_prev, cfg.d_hidden, cfg.d_hidden],
+                            cfg.dtype),
+            "eps": jnp.zeros((), cfg.dtype),
+        })
+        d_prev = cfg.d_hidden
+    # per-layer readout heads (JK): d_in for layer 0's input + hidden each
+    heads = mlp_init(ks[-1], [cfg.d_hidden * cfg.n_layers, cfg.n_classes],
+                     cfg.dtype)
+    return {"layers": layers, "head": heads}
+
+
+def forward(params, g: GraphBatch, cfg: GINConfig) -> jnp.ndarray:
+    n = g.n_nodes
+    x = g.node_feat.astype(cfg.dtype)
+    x = sl.shard(x, "nodes", None)
+    e = g.src.shape[0]
+    n_chunks = (-(-e // cfg.edge_chunk)
+                if cfg.edge_chunk and e > cfg.edge_chunk else 1)
+    reps = []
+    for lp in params["layers"]:
+        if cfg.edge_layout == "partitioned":
+            from .common import partitioned_aggregate
+            agg = partitioned_aggregate(
+                x, (g.src, g.dst),
+                lambda xf, s, d: (jnp.take(xf, s, axis=0, fill_value=0), d),
+                n, x.shape[1:], x.dtype, n_chunks=n_chunks)
+        elif n_chunks == 1:
+            agg = gather_scatter_sum(x, g.src, g.dst, n)
+        else:
+            from .common import chunked_scatter_sum
+            agg = chunked_scatter_sum(
+                lambda s, d: (jnp.take(x, s, axis=0, fill_value=0), d),
+                n_chunks, (g.src, g.dst), n, x.shape[1:], x.dtype)
+        x = mlp((1.0 + lp["eps"]) * x + agg, lp["mlp"])
+        x = sl.shard(x, "nodes", None)
+        reps.append(x)
+    h = jnp.concatenate(reps, axis=-1)
+    if cfg.node_level:
+        return mlp(h, [params["head"][0]])
+    pooled = graph_readout(h, g.graph_ids, g.n_graphs, op="sum")
+    return mlp(pooled, [params["head"][0]])
+
+
+def loss_fn(params, g: GraphBatch, cfg: GINConfig) -> jnp.ndarray:
+    logits = forward(params, g, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, g.labels[:, None], axis=-1)[:, 0]
+    if cfg.node_level and g.train_mask is not None:
+        return (nll * g.train_mask).sum() / jnp.maximum(g.train_mask.sum(), 1)
+    return nll.mean()

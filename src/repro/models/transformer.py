@@ -1,0 +1,407 @@
+"""Decoder-only LM family covering the five assigned transformer archs.
+
+One config class expresses all of them:
+
+* dense GQA (glm4-9b, command-r-35b)         — ``moe=None``
+* 5:1 local:global sliding window (gemma3)   — ``local_global_period=6``
+* MoE top-k (granite-moe 32e/top-8,
+  qwen3-moe 128e/top-8)                      — ``moe=MoEConfig(...)``
+
+Layers are scanned in *cycles* of ``local_global_period`` (1 for uniform
+stacks): params are stacked ``[n_cycles, ...]`` per cycle position, the
+cycle body is remat'd (``jax.checkpoint``), and the scan keeps HLO size
+independent of depth — essential for compiling 40 dry-run cells.
+
+Distribution (all via logical axes, resolved by the launcher's rules):
+batch → ('pod','data'); heads / mlp / experts / vocab → 'model'; weight
+input dims → 'data' (FSDP: XLA all-gathers parameters per layer); the
+residual stream is sequence-sharded on 'model' between blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .. import shardlib as sl
+from .layers import (MoEConfig, apply_rope, attention_causal,
+                     attention_causal_opt, attention_decode,
+                     attention_window, dense_init, moe_block, rms_norm,
+                     swiglu)
+
+DP = "batch"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # defaults to d_model // n_heads
+    rope_theta: float = 1e4
+    moe: Optional[MoEConfig] = None
+    sliding_window: Optional[int] = None    # window for *local* layers
+    local_global_period: int = 1            # 6 => 5 local + 1 global (gemma3)
+    tie_embeddings: bool = True
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_chunk: int = 1024
+    loss_chunk: int = 2048
+    subquadratic: bool = False              # True iff long-context decode ok
+    # §Perf optimized attention: flat-GQA head broadcast (stable sharding),
+    # bf16 probabilities, chunk annotations — see layers.attention_causal_opt
+    attn_opt: bool = False
+    # remat policy: "none" saves only layer boundaries (min memory, max
+    # recompute); "block_outs" additionally saves each attention/MLP block
+    # output, skipping their recompute in backward (§Perf iteration 2)
+    remat_policy: str = "none"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_cycles(self) -> int:
+        assert self.n_layers % self.local_global_period == 0
+        return self.n_layers // self.local_global_period
+
+    def layer_is_local(self, pos_in_cycle: int) -> bool:
+        """gemma3 pattern: positions 0..p-2 local, p-1 global."""
+        if self.sliding_window is None or self.local_global_period == 1:
+            return self.sliding_window is not None
+        return pos_in_cycle != self.local_global_period - 1
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.hd
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.moe is None:
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        per_layer = attn + mlp + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() - self.n_layers * self.moe.n_experts * 3 * d * self.moe.d_ff
+        return dense + self.n_layers * self.moe.top_k * 3 * d * self.moe.d_ff
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _layer_params(key, cfg: TransformerConfig, dt) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.zeros((d,), dt),
+        "ln2": jnp.zeros((d,), dt),
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype=dt),
+    }
+    if cfg.moe is None:
+        p.update(wg=dense_init(ks[4], (d, cfg.d_ff), dtype=dt),
+                 wu=dense_init(ks[5], (d, cfg.d_ff), dtype=dt),
+                 wd=dense_init(ks[6], (cfg.d_ff, d), dtype=dt))
+    else:
+        e, f = cfg.moe.n_experts, cfg.moe.d_ff
+        p.update(router=dense_init(ks[7], (d, e), dtype=jnp.float32),
+                 wg=dense_init(ks[4], (e, d, f), in_axis=1, dtype=dt),
+                 wu=dense_init(ks[5], (e, d, f), in_axis=1, dtype=dt),
+                 wd=dense_init(ks[6], (e, f, d), in_axis=1, dtype=dt))
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    # Stack per cycle position: pytree of arrays [n_cycles, ...].
+    per_pos: List[Dict[str, Any]] = []
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    for pos in range(cfg.local_global_period):
+        stack = [
+            _layer_params(lkeys[c * cfg.local_global_period + pos], cfg, dt)
+            for c in range(cfg.n_cycles)
+        ]
+        per_pos.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stack))
+    params = {
+        "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), dtype=dt),
+        "ln_f": jnp.zeros((cfg.d_model,), dt),
+        "layers": per_pos,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab), dtype=dt)
+    return params
+
+
+def param_shardings(cfg: TransformerConfig):
+    """Logical axes per parameter (FSDP on input dims, TP on output dims)."""
+    attn = dict(ln1=(None,), ln2=(None,),
+                wq=("fsdp", "heads"), wk=("fsdp", "kv_heads"),
+                wv=("fsdp", "kv_heads"), wo=("heads", "fsdp"))
+    if cfg.moe is None:
+        attn.update(wg=("fsdp", "mlp"), wu=("fsdp", "mlp"), wd=("mlp", "fsdp"))
+    else:
+        attn.update(router=(None, None),
+                    wg=("expert", "fsdp", None), wu=("expert", "fsdp", None),
+                    wd=("expert", None, "fsdp"))
+    layer = {k: ("layer_stack",) + v if not isinstance(v, tuple) else
+             ("layer_stack",) + v for k, v in attn.items()}
+    tree = {"embed": ("vocab", "fsdp"), "ln_f": (None,),
+            "layers": [dict(layer) for _ in range(cfg.local_global_period)]}
+    if not cfg.tie_embeddings:
+        tree["head"] = ("fsdp", "vocab")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn_train(x, lp, cfg: TransformerConfig, local: bool, positions):
+    b, s, d = x.shape
+    hd = cfg.hd
+    h = rms_norm(x, lp["ln1"])
+    h = sl.shard(h, DP, "seq", None)
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = sl.shard(q, DP, None, "heads", None)
+    k = sl.shard(apply_rope(k, positions, cfg.rope_theta), DP, None, None, None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    if local and cfg.sliding_window is not None:
+        o = attention_window(q, k, v, cfg.sliding_window,
+                             q_positions=positions)
+    elif cfg.attn_opt:
+        o = attention_causal_opt(q, k, v, chunk=cfg.attn_chunk,
+                                 q_positions=positions,
+                                 kv_positions=positions)
+    else:
+        o = attention_causal(q, k, v, chunk=cfg.attn_chunk,
+                             q_positions=positions, kv_positions=positions)
+    o = sl.shard(o, DP, None, "heads", None)
+    return o.reshape(b, s, cfg.n_heads * hd) @ lp["wo"]
+
+
+def _mlp_train(x, lp, cfg: TransformerConfig):
+    h = rms_norm(x, lp["ln2"])
+    if cfg.moe is None:
+        return swiglu(h, lp["wg"], lp["wu"], lp["wd"]), jnp.float32(0.0)
+    return moe_block(h, lp["router"], lp["wg"], lp["wu"], lp["wd"], cfg.moe)
+
+
+def _cycle_body(carry, cycle_params, cfg: TransformerConfig, positions):
+    x, aux = carry
+    for pos in range(cfg.local_global_period):
+        lp = cycle_params[pos]
+        local = cfg.layer_is_local(pos)
+        attn_out = sl.shard(_attn_train(x, lp, cfg, local, positions),
+                            DP, "seq", None)
+        if cfg.remat_policy == "block_outs":
+            attn_out = checkpoint_name(attn_out, "block_out")
+        x = x + attn_out
+        dx, a = _mlp_train(x, lp, cfg)
+        dx = sl.shard(dx, DP, "seq", None)
+        if cfg.remat_policy == "block_outs":
+            dx = checkpoint_name(dx, "block_out")
+        x = x + dx
+        aux = aux + a
+    return (x, aux), None
+
+
+def forward(params, tokens, cfg: TransformerConfig,
+            positions: Optional[jnp.ndarray] = None):
+    """tokens [B, S] -> final hidden states [B, S, D] (+ MoE aux loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens] * jnp.sqrt(
+        jnp.asarray(cfg.d_model, cd))
+    x = sl.shard(x, DP, "seq", None)
+
+    body = functools.partial(_cycle_body, cfg=cfg, positions=positions)
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.save_only_these_names("block_out")
+                  if cfg.remat_policy == "block_outs"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy, static_argnums=())
+
+    cast = lambda t: jax.tree.map(lambda a: a.astype(cd)
+                                  if a.dtype != jnp.float32 or a.ndim > 1
+                                  else a, t)
+    stacked = [cast(p) for p in params["layers"]]
+    (x, aux), _ = jax.lax.scan(lambda c, ps: body(c, ps),
+                               (x, jnp.float32(0.0)),
+                               stacked)
+    x = rms_norm(x, params["ln_f"].astype(cd))
+    return sl.shard(x, DP, "seq", None), aux
+
+
+def lm_head_weight(params, cfg: TransformerConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def loss_fn(params, tokens, labels, cfg: TransformerConfig):
+    """Chunked cross-entropy: logits are materialized per seq chunk only."""
+    x, aux = forward(params, tokens, cfg)
+    b, s, d = x.shape
+    w = lm_head_weight(params, cfg).astype(cfg.compute_dtype)
+    c = min(cfg.loss_chunk, s)
+    nc = s // c
+
+    def chunk_loss(xc, yc):
+        logits = (xc @ w).astype(jnp.float32)
+        logits = sl.shard(logits, DP, None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return (lse - picked).sum()
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    xs = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ys = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def body(tot, blk):
+        xc, yc = blk
+        return tot + chunk_loss(xc, yc), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ys))
+    return tot / (b * s) + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: TransformerConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    """Cache pytree: per cycle position, K and V of [n_cycles, B, S*, Kh, hd].
+
+    Local layers get a rolling window-sized cache; global layers the full
+    ``seq_len`` — at gemma3's 5:1 ratio this is an ~83% cache-byte saving
+    and the only reason long_500k fits.
+    """
+    caches = []
+    for pos in range(cfg.local_global_period):
+        s = (min(cfg.sliding_window, seq_len)
+             if cfg.layer_is_local(pos) and cfg.sliding_window else seq_len)
+        shp = (cfg.n_cycles, batch, s, cfg.n_kv_heads, cfg.hd)
+        caches.append({"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)})
+    return caches
+
+
+def cache_shardings(cfg: TransformerConfig):
+    ax = ("layer_stack", "batch", "kv_seq", None, None)
+    return [{"k": ax, "v": ax} for _ in range(cfg.local_global_period)]
+
+
+def decode_step(params, caches, tokens, cur_len, cfg: TransformerConfig):
+    """One decode step: tokens [B] int32, cur_len scalar -> (logits, caches).
+
+    The new token sits at position cur_len; entries [0, cur_len) are valid.
+    """
+    cd = cfg.compute_dtype
+    b = tokens.shape[0]
+    x = params["embed"].astype(cd)[tokens] * jnp.sqrt(
+        jnp.asarray(cfg.d_model, cd))            # [B, D]
+    pos = jnp.asarray(cur_len, jnp.int32)
+
+    def cycle(carry, scanned):
+        x, = carry
+        cycle_params, cycle_caches = scanned
+        new_caches = []
+        for p_i in range(cfg.local_global_period):
+            lp = jax.tree.map(lambda a: a.astype(cd)
+                              if a.ndim > 1 else a.astype(cd), cycle_params[p_i])
+            local = cfg.layer_is_local(p_i)
+            window = cfg.sliding_window if local else None
+            h = rms_norm(x, lp["ln1"])
+            q = (h @ lp["wq"]).reshape(b, cfg.n_heads, cfg.hd)
+            kn = (h @ lp["wk"]).reshape(b, cfg.n_kv_heads, cfg.hd)
+            vn = (h @ lp["wv"]).reshape(b, cfg.n_kv_heads, cfg.hd)
+            q = apply_rope(q[:, None], pos[None], cfg.rope_theta)[:, 0]
+            kn = apply_rope(kn[:, None], pos[None], cfg.rope_theta)[:, 0]
+            kc, vc = cycle_caches[p_i]["k"], cycle_caches[p_i]["v"]
+            o, kc, vc = attention_decode(q, kc, vc, kn, vn, pos,
+                                         window=window)
+            new_caches.append({"k": kc, "v": vc})
+            x = x + (o.reshape(b, cfg.n_heads * cfg.hd) @ lp["wo"])
+            h2 = rms_norm(x, lp["ln2"])
+            if cfg.moe is None:
+                dx = swiglu(h2, lp["wg"], lp["wu"], lp["wd"])
+            else:
+                dx, _ = moe_block(h2[:, None, :], lp["router"], lp["wg"],
+                                  lp["wu"], lp["wd"], cfg.moe)
+                dx = dx[:, 0]
+            x = x + dx
+        return (x,), new_caches
+
+    (x,), new_caches = jax.lax.scan(cycle, (x,),
+                                    (params["layers"], caches))
+    x = rms_norm(x, params["ln_f"].astype(cd))
+    logits = (x @ lm_head_weight(params, cfg).astype(cd)).astype(jnp.float32)
+    return sl.shard(logits, DP, "vocab"), new_caches
+
+
+def prefill(params, tokens, cfg: TransformerConfig):
+    """tokens [B, S] -> (last-position logits [B, V], caches filled [0, S))."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens] * jnp.sqrt(
+        jnp.asarray(cfg.d_model, cd))
+    x = sl.shard(x, DP, "seq", None)
+
+    def cycle(x, cycle_params):
+        kvs = []
+        for p_i in range(cfg.local_global_period):
+            lp = jax.tree.map(lambda a: a.astype(cd), cycle_params[p_i])
+            local = cfg.layer_is_local(p_i)
+            h = rms_norm(x, lp["ln1"])
+            q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+            k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+            v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            q = sl.shard(q, DP, None, "heads", None)
+            if local and cfg.sliding_window is not None:
+                o = attention_window(q, k, v, cfg.sliding_window,
+                                     q_positions=positions)
+                w = min(cfg.sliding_window, s)
+                kvs.append({"k": k[:, -w:], "v": v[:, -w:]})
+            else:
+                o = attention_causal(q, k, v, chunk=cfg.attn_chunk,
+                                     q_positions=positions,
+                                     kv_positions=positions)
+                kvs.append({"k": k, "v": v})
+            x = x + (o.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["wo"])
+            h2 = rms_norm(x, lp["ln2"])
+            if cfg.moe is None:
+                dx = swiglu(h2, lp["wg"], lp["wu"], lp["wd"])
+            else:
+                dx, _ = moe_block(h2, lp["router"], lp["wg"], lp["wu"],
+                                  lp["wd"], cfg.moe)
+            x = x + sl.shard(dx, DP, "seq", None)
+        return x, kvs
+
+    x, caches = jax.lax.scan(cycle, x, params["layers"])
+    x = rms_norm(x, params["ln_f"].astype(cd))
+    logits = (x[:, -1] @ lm_head_weight(params, cfg).astype(cd))
+    return sl.shard(logits.astype(jnp.float32), DP, "vocab"), caches

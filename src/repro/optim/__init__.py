@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update, OptState, clip_by_global_norm  # noqa: F401
+from .schedules import cosine_schedule, linear_warmup  # noqa: F401
+from .compress import (quantize_int8, dequantize_int8,  # noqa: F401
+                       topk_sparsify, ErrorFeedback, compressed_mean)

@@ -1,0 +1,61 @@
+"""Per-architecture smoke: reduced config, one real step, shapes + no NaNs.
+
+Covers every runnable (arch × shape) cell at reduced scale — the full
+configs are exercised (abstractly) by the dry-run only.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_cells
+from repro.launch.steps import build_cell
+
+CELLS, SKIPPED = all_cells()
+
+
+def test_skip_list_matches_assignment():
+    """long_500k must be skipped exactly for the pure full-attention archs
+    and must run for gemma3 (5:1 local:global)."""
+    skipped_archs = {a for a, s, _ in SKIPPED if s == "long_500k"}
+    assert skipped_archs == {"glm4-9b", "command-r-35b",
+                             "granite-moe-1b-a400m", "qwen3-moe-30b-a3b"}
+    assert ("gemma3-12b", "long_500k") in CELLS
+    assert len(CELLS) + len(SKIPPED) == 40
+
+
+@pytest.mark.parametrize("arch,shape", CELLS,
+                         ids=[f"{a}-{s}" for a, s in CELLS])
+def test_cell_smoke(arch, shape):
+    cell = build_cell(arch, shape, smoke=True)
+    out = cell.fn(*cell.args)
+    for leaf in jax.tree.leaves(out):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.all(jnp.isfinite(leaf))), (arch, shape)
+    # train cells must produce a scalar loss
+    if cell.kind == "train":
+        _, metrics = out
+        assert metrics["loss"].shape == ()
+
+
+def test_param_counts_match_published_sizes():
+    """Full configs land in the advertised parameter range."""
+    from repro.configs import get_arch
+    expected = {
+        "glm4-9b": (8e9, 11e9),
+        # the assigned dims (40L·d8192·64H·ff22528·v256k tied) compute to
+        # 30.3B; the "35B" marketing count includes extra width not in the
+        # assignment — the assigned config is definitive here.
+        "command-r-35b": (28e9, 38e9),
+        "gemma3-12b": (10e9, 14e9),
+        "granite-moe-1b-a400m": (0.9e9, 1.5e9),
+        "qwen3-moe-30b-a3b": (27e9, 33e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_arch(arch).CONFIG
+        n = cfg.param_count()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active params
+    q = get_arch("qwen3-moe-30b-a3b").CONFIG
+    assert 2e9 <= q.active_param_count() <= 4.5e9   # "a3b"
+    g = get_arch("granite-moe-1b-a400m").CONFIG
+    assert 0.25e9 <= g.active_param_count() <= 0.6e9  # "a400m"

@@ -1,0 +1,199 @@
+"""HoD end-to-end correctness vs the Dijkstra oracle (+ hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import pytest as _pytest
+
+from repro.core import (BuildConfig, QueryEngine, build_hod,
+                        dijkstra_reference, from_edges, gnm_random_digraph,
+                        grid_road_graph, pack_index, power_law_digraph,
+                        symmetrize)
+from repro.core.build_fast import build_hod_fast
+
+CFG = BuildConfig(max_core_nodes=48, max_core_edges=2048, seed=0)
+
+BUILDERS = {"reference": build_hod, "vectorized": build_hod_fast}
+
+
+def _check_graph(g, sources, core_modes=("closure", "bellman", "dijkstra"),
+                 chunk=128, builder=build_hod):
+    res = builder(g, CFG)
+    ix = pack_index(g, res, chunk=chunk)
+    oracle = dijkstra_reference(g, sources)
+    for mode in core_modes:
+        eng = QueryEngine(ix, core_mode=mode)
+        d = eng.ssd(sources)[:, :g.n]
+        finite = np.isfinite(oracle)
+        assert np.allclose(d[finite], oracle[finite], rtol=1e-5), mode
+        assert np.all(np.isinf(d[~finite])), mode
+    return ix, res
+
+
+@_pytest.fixture(params=list(BUILDERS), ids=list(BUILDERS))
+def builder(request):
+    return BUILDERS[request.param]
+
+
+def test_gnm_directed(builder):
+    g = gnm_random_digraph(250, 1000, seed=7)
+    _check_graph(g, np.arange(6, dtype=np.int32) * 40, builder=builder)
+
+
+def test_grid_road(builder):
+    g = grid_road_graph(15, seed=3)
+    _check_graph(g, np.array([0, 7, 100, 224], dtype=np.int32),
+                 builder=builder)
+
+
+def test_power_law_weighted(builder):
+    g = power_law_digraph(300, 3, seed=5, weighted=True)
+    _check_graph(g, np.array([0, 10, 299], dtype=np.int32), builder=builder)
+
+
+def test_undirected_symmetrized(builder):
+    g = symmetrize(gnm_random_digraph(150, 450, seed=11))
+    _check_graph(g, np.array([0, 50, 149], dtype=np.int32), builder=builder)
+
+
+def test_vectorized_build_rank_invariants():
+    g = gnm_random_digraph(300, 1200, seed=2)
+    res = build_hod_fast(g, CFG)
+    rank = res.rank
+    for v in res.removal_order:
+        for (other, _, _) in res.f_adj[v]:
+            assert rank[other] > rank[v]
+        for (other, _, _) in res.b_adj[v]:
+            assert rank[other] > rank[v]
+
+
+def test_rank_invariants():
+    """Paper §4.5: F_f/F_b edges strictly up-rank; file order == rank order;
+    no two same-rank adjacent nodes."""
+    g = gnm_random_digraph(200, 900, seed=2)
+    res = build_hod(g, CFG)
+    rank = res.rank
+    for v in res.removal_order:
+        for (other, _, _) in res.f_adj[v]:
+            assert rank[other] > rank[v]
+        for (other, _, _) in res.b_adj[v]:
+            assert rank[other] > rank[v]
+    # removal order is round-major => ranks are non-decreasing in file order
+    ranks_in_order = [rank[v] for v in res.removal_order]
+    assert ranks_in_order == sorted(ranks_in_order)
+
+
+def test_sssp_paths_are_valid_shortest_paths():
+    g = gnm_random_digraph(200, 800, seed=13)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=128)
+    eng = QueryEngine(ix)
+    sources = np.array([0, 5], dtype=np.int32)
+    dist, pred = eng.sssp(sources)
+    oracle = dijkstra_reference(g, sources)
+    # adjacency for edge-length lookup
+    adj = {}
+    src, dst, w = g.edge_list()
+    for a, b, ww in zip(src.tolist(), dst.tolist(), w.tolist()):
+        adj[(a, b)] = min(adj.get((a, b), np.inf), ww)
+    for i, s in enumerate(sources.tolist()):
+        for t in range(0, g.n, 17):
+            if not np.isfinite(oracle[i, t]) or t == s:
+                continue
+            # walk back via predecessors; total length must equal dist
+            cur, total, hops = t, 0.0, 0
+            while cur != s:
+                p = int(pred[i, cur])
+                assert p >= 0, (s, t, cur)
+                assert (p, cur) in adj, "predecessor edge not in G"
+                total += adj[(p, cur)]
+                cur = p
+                hops += 1
+                assert hops <= g.n
+            assert np.isclose(total, oracle[i, t], rtol=1e-5)
+
+
+def test_index_save_load_roundtrip(tmp_path):
+    g = gnm_random_digraph(120, 500, seed=21)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    path = str(tmp_path / "hod_index.npz")
+    ix.save(path)
+    from repro.core.index import HoDIndex
+    ix2 = HoDIndex.load(path)
+    src = np.array([3, 77], dtype=np.int32)
+    d1 = QueryEngine(ix).ssd(src)
+    d2 = QueryEngine(ix2).ssd(src)
+    assert np.array_equal(d1, d2)
+
+
+def test_batched_equals_single():
+    g = gnm_random_digraph(150, 600, seed=4)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    eng = QueryEngine(ix)
+    batch = eng.ssd(np.array([1, 2, 3], dtype=np.int32))
+    for i, s in enumerate([1, 2, 3]):
+        single = eng.ssd(np.array([s], dtype=np.int32))
+        assert np.array_equal(batch[i], single[0])
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(8, 60))
+    m = draw(st.integers(n, 4 * n))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.integers(1, 9, m).astype(np.float64)
+    keep = src != dst
+    return n, src[keep], dst[keep], w[keep], seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_property_hod_matches_dijkstra(data):
+    n, src, dst, w, seed = data
+    if src.size == 0:
+        return
+    g = from_edges(n, src, dst, w)
+    cfg = BuildConfig(max_core_nodes=8, max_core_edges=256, seed=seed % 7)
+    res = build_hod(g, cfg)
+    ix = pack_index(g, res, chunk=32)
+    sources = np.array([0, n // 2, n - 1], dtype=np.int32)
+    oracle = dijkstra_reference(g, sources)
+    d = QueryEngine(ix).ssd(sources)[:, :n]
+    finite = np.isfinite(oracle)
+    assert np.allclose(d[finite], oracle[finite], rtol=1e-5)
+    assert np.all(np.isinf(d[~finite]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(random_graphs())
+def test_property_shortcut_lengths_never_shorter(data):
+    """Augmentation soundness: added shortcuts can only match (never beat)
+    true distances — the invariant behind §4.1's 'retaining e is safe'."""
+    n, src, dst, w, seed = data
+    if src.size == 0:
+        return
+    g = from_edges(n, src, dst, w)
+    res = build_hod(g, BuildConfig(max_core_nodes=8, max_core_edges=256))
+    oracle = dijkstra_reference(g, np.arange(n, dtype=np.int32))
+    for v in res.removal_order:
+        for (u, ww, _) in res.f_adj[v]:
+            assert ww >= oracle[v, u] - 1e-9
+        for (u, ww, _) in res.b_adj[v]:
+            assert ww >= oracle[u, v] - 1e-9
+
+
+def test_closeness_estimation_runs():
+    from repro.core import estimate_closeness
+    g = grid_road_graph(10, seed=1)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    eng = QueryEngine(ix)
+    out = estimate_closeness(eng, k_override=16, batch_size=8)
+    assert out.closeness.shape == (g.n,)
+    assert np.all(np.isfinite(out.closeness))
+    assert out.k == 16
