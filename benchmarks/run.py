@@ -1,6 +1,6 @@
 """Benchmark entrypoint: one module per paper table + the roofline report.
 
-    PYTHONPATH=src python -m benchmarks.run [--tables 2,3,4,5,6,hod,roof]
+    PYTHONPATH=src python -m benchmarks.run [--tables 2,3,4,5,6,hod,serve,roof]
 """
 import argparse
 import sys
@@ -9,7 +9,7 @@ import time
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="2,3,4,5,6,hod,roof")
+    ap.add_argument("--tables", default="2,3,4,5,6,hod,serve,roof")
     args = ap.parse_args()
     want = set(args.tables.split(","))
     t0 = time.time()
@@ -32,6 +32,9 @@ def main() -> int:
     if "hod" in want:
         from . import hod_scaling
         hod_scaling.run()
+    if "serve" in want:
+        from . import serve_throughput
+        serve_throughput.run()
     if "roof" in want:
         from . import roofline
         roofline.run()

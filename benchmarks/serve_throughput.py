@@ -1,0 +1,49 @@
+"""Batched serving throughput: queries/sec + modeled disk I/O per batch
+size — the amortization claim behind the whole serving design (DESIGN.md
+§6): every source in a batch shares one sequential index scan, so modeled
+I/O per query falls linearly with batch size while measured throughput
+rises until the sweeps saturate the device.
+
+    PYTHONPATH=src python -m benchmarks.run --tables serve
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.serve import QueryServer
+
+from .common import build_hod_cached, dataset_suite, fmt_row
+
+BATCH_SIZES = (1, 16, 128)
+N_REQUESTS = 256
+
+
+def run(dataset: str = "USRN-like") -> None:
+    g = dataset_suite()[dataset]
+    art = build_hod_cached(dataset, g)
+    rng = np.random.default_rng(0)
+    # distinct sources: measure the sweeps, not the LRU cache
+    sources = rng.choice(g.n, size=min(N_REQUESTS, g.n),
+                         replace=False).astype(np.int32)
+
+    print(f"\n== Serving throughput ({dataset}: n={g.n} m={g.m}, "
+          f"{sources.shape[0]} requests) ==")
+    print(fmt_row(["batch", "queries/s", "ms/query", "io ms/query",
+                   "io ms/batch", "seq blocks"]))
+    for b in BATCH_SIZES:
+        server = QueryServer(art.engine, batch_size=b, cache_entries=0)
+        server.warmup()
+        results = server.serve_stream(sources)
+        st = server.stats
+        io = server.modeled_io()
+        io_s = io.modeled_seconds()
+        qps = st.throughput()
+        print(fmt_row([
+            b, f"{qps:.0f}", f"{1e3/qps:.2f}" if qps else "-",
+            f"{io_s/st.requests*1e3:.2f}",
+            f"{io_s/st.batches*1e3:.1f}", io.seq_blocks]))
+        assert all(np.isfinite(r.dist[: g.n]).all() for r in results)
+
+
+if __name__ == "__main__":
+    run()

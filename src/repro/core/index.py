@@ -30,7 +30,8 @@ import numpy as np
 from .build import BuildResult
 from .graph import Digraph
 
-__all__ = ["HoDIndex", "pack_index", "floyd_warshall_closure"]
+__all__ = ["HoDIndex", "LevelBuckets", "level_buckets", "pack_index",
+           "floyd_warshall_closure"]
 
 INF = np.float32(np.inf)
 
@@ -116,6 +117,73 @@ class HoDIndex:
             core_closure=z["core_closure"], core_ptr=z["core_ptr"],
             core_dst=z["core_dst"], core_w=z["core_w"],
             core_assoc=z["core_assoc"])
+
+
+@dataclasses.dataclass
+class LevelBuckets:
+    """One sweep level in the bucketed ``[M, K]`` kernel layout (DESIGN.md §5).
+
+    Each of the level's destination nodes owns ``ceil(indeg / K)`` rows of
+    ``K`` padded in-edge slots; rows of one destination are combined by the
+    scatter-min, so splitting long in-edge lists across rows is lossless.
+    Padding slots point at the sentinel column with ``+inf`` weight —
+    absorbing under (min, +).
+    """
+
+    dst: np.ndarray      # [M]    permuted destination node of each row
+    src_idx: np.ndarray  # [M, K] permuted source node per in-edge slot
+    w: np.ndarray        # [M, K] edge lengths, +inf in padding slots
+
+
+def level_buckets(ix: "HoDIndex", forward: bool,
+                  k_cap: int = 16) -> List[LevelBuckets]:
+    """Re-derive the per-level bucketed layout from the flat chunk arrays.
+
+    The chunk arrays are level-aligned (DESIGN.md §4), so the level of every
+    real edge is recoverable from its level-defining endpoint: the *source*
+    for forward edges, the *destination* for backward edges (both are
+    removed nodes, i.e. permuted ids below ``n_noncore``).  Levels are
+    emitted in sweep order — ascending for the forward sweep, descending
+    for the backward sweep — and empty levels are skipped.
+    """
+    if forward:
+        src, dst, w = ix.f_src, ix.f_dst, ix.f_w
+    else:
+        src, dst, w = ix.b_src, ix.b_dst, ix.b_w
+    src, dst, w = src.reshape(-1), dst.reshape(-1), w.reshape(-1)
+    real = np.isfinite(w)
+    src, dst, w = src[real], dst[real], w[real]
+    if src.size == 0:
+        return []
+    key = src if forward else dst
+    lvl = np.searchsorted(ix.level_ptr, key, side="right") - 1
+
+    out: List[LevelBuckets] = []
+    order = range(ix.n_levels) if forward else range(ix.n_levels - 1, -1, -1)
+    for level in order:
+        sel = lvl == level
+        if not sel.any():
+            continue
+        s_l, d_l, w_l = src[sel], dst[sel], w[sel]
+        o = np.argsort(d_l, kind="stable")
+        s_l, d_l, w_l = s_l[o], d_l[o], w_l[o]
+        uniq, starts, counts = np.unique(d_l, return_index=True,
+                                         return_counts=True)
+        k = int(min(counts.max(), k_cap))
+        rows_per = -(-counts // k)
+        row_off = np.concatenate([[0], np.cumsum(rows_per)])
+        grp = np.repeat(np.arange(uniq.size), counts)
+        pos = np.arange(d_l.size) - np.repeat(starts, counts)
+        row, col = row_off[grp] + pos // k, pos % k
+        m = int(row_off[-1])
+        src_idx = np.full((m, k), ix.n, dtype=np.int32)
+        w_bkt = np.full((m, k), INF, dtype=np.float32)
+        src_idx[row, col] = s_l
+        w_bkt[row, col] = w_l
+        out.append(LevelBuckets(
+            dst=np.repeat(uniq, rows_per).astype(np.int32),
+            src_idx=src_idx, w=w_bkt))
+    return out
 
 
 def _pack_chunks(levels: List[Tuple[np.ndarray, np.ndarray, np.ndarray,

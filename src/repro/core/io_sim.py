@@ -27,7 +27,22 @@ class IOStats:
     def modeled_seconds(self, block_bytes: int = 65536,
                         seq_mb_s: float = 120.0,
                         seek_ms: float = 8.0) -> float:
-        seq_t = (self.bytes_seq + self.bytes_rand) / (seq_mb_s * 1e6)
+        """Modeled wall time on the reference device.
+
+        Assumptions (commodity 2013 HDD, matching the paper's setting):
+
+        * every access moves whole blocks — ``seq_blocks``/``rand_blocks``
+          already count ``ceil(bytes / B)`` per access, so transfer time is
+          ``(seq_blocks + rand_blocks) * block_bytes`` at the streaming
+          rate (``seq_mb_s``); pass the same ``block_bytes`` the metering
+          :class:`BlockDevice` was built with;
+        * once the head is positioned, random blocks stream at the same
+          rate as sequential ones — randomness costs exactly one full
+          ``seek_ms`` per random block, nothing more;
+        * no caching, no read-ahead, no overlap of seek and transfer.
+        """
+        blocks = self.seq_blocks + self.rand_blocks
+        seq_t = blocks * block_bytes / (seq_mb_s * 1e6)
         seek_t = self.rand_blocks * seek_ms * 1e-3
         return seq_t + seek_t
 

@@ -36,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .index import HoDIndex
+from .. import shardlib as sl
+from ..kernels.edge_relax.ops import relax_bucketed
+from .index import HoDIndex, level_buckets
 
 __all__ = ["QueryEngine", "dijkstra_reference"]
 
@@ -108,10 +110,17 @@ class QueryEngine:
       * ``"bellman"``  — in-JAX iterative min-plus to fixpoint (diameter-
                           bounded), closest in spirit to scanning G_c
       * ``"dijkstra"`` — paper-faithful host-side heap Dijkstra on the core
+
+    With ``use_pallas=True`` the forward/backward sweeps run through the
+    fused ``relax_bucketed`` kernel over the per-level ``[M, K]`` bucketed
+    layout (DESIGN.md §5), and the core search through the Pallas tropical
+    matmul; ``interpret`` (default: auto, on except on real TPUs) selects
+    Pallas interpret mode so the same path runs on CPU.
     """
 
     def __init__(self, index: HoDIndex, core_mode: str = "closure",
-                 use_pallas: bool = False, eps: float = 0.0):
+                 use_pallas: bool = False, eps: float = 0.0,
+                 interpret: Optional[bool] = None, k_cap: int = 16):
         if core_mode not in ("closure", "bellman", "dijkstra"):
             raise ValueError(core_mode)
         if core_mode == "closure" and index.n_core \
@@ -120,7 +129,19 @@ class QueryEngine:
         self.index = index
         self.core_mode = core_mode
         self.use_pallas = use_pallas
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
         self.eps = float(eps)
+
+        if use_pallas:
+            self._f_bkt = [
+                (jnp.asarray(b.dst), jnp.asarray(b.src_idx), jnp.asarray(b.w))
+                for b in level_buckets(index, forward=True, k_cap=k_cap)]
+            self._b_bkt = [
+                (jnp.asarray(b.dst), jnp.asarray(b.src_idx), jnp.asarray(b.w))
+                for b in level_buckets(index, forward=False, k_cap=k_cap)]
+        else:
+            self._f_bkt = self._b_bkt = []
 
         ix = index
         self._f = (jnp.asarray(ix.f_src), jnp.asarray(ix.f_dst),
@@ -172,6 +193,21 @@ class QueryEngine:
             self._sssp_impl, core_mode=core_mode))
 
     # ------------------------------------------------------------------ SSD
+    def _sweep_bucketed(self, dist: jnp.ndarray, buckets) -> jnp.ndarray:
+        """Level-by-level fused relaxation via the Pallas kernel.
+
+        Within one level the gathered sources and the scattered
+        destinations are disjoint (DESIGN.md §3), so gather-then-scatter is
+        race-free; rows that split one destination's long in-edge list are
+        merged by the scatter-min.
+        """
+        for (dsts, src_idx, w) in buckets:
+            cur = dist[:, dsts]
+            new = relax_bucketed(dist, src_idx, w, cur, use_pallas=True,
+                                 interpret=self.interpret)
+            dist = dist.at[:, dsts].min(new)
+        return dist
+
     def _core_update(self, dist: jnp.ndarray, core_mode: str) -> jnp.ndarray:
         ix = self.index
         c = ix.n_core
@@ -197,7 +233,7 @@ class QueryEngine:
         else:  # closure
             if self.use_pallas:
                 from ..kernels.tropical_matmul.ops import minplus
-                dc = minplus(dc, self._closure)
+                dc = minplus(dc, self._closure, interpret=self.interpret)
             else:
                 dc = _minplus_blocked(dc, self._closure)
         return jax.lax.dynamic_update_slice_in_dim(dist, dc, lo, axis=1)
@@ -208,10 +244,20 @@ class QueryEngine:
         s = sources_perm.shape[0]
         dist = jnp.full((s, ix.n_pad), INF, jnp.float32)
         dist = dist.at[jnp.arange(s), sources_perm].set(0.0)
-        dist = _sweep(dist, *self._f)                  # forward search  (§5.1)
+        # Sources are embarrassingly parallel: under an active mesh whose
+        # rules bind "batch", the [S, n_pad] state shards over devices and
+        # every sweep below runs data-parallel (no-op without a mesh).
+        dist = sl.shard(dist, "batch", None)
+        if self.use_pallas:                            # forward search  (§5.1)
+            dist = self._sweep_bucketed(dist, self._f_bkt)
+        else:
+            dist = _sweep(dist, *self._f)
         if core_mode != "dijkstra":
             dist = self._core_update(dist, core_mode)  # core search     (§5.2)
-        dist = _sweep(dist, *self._b)                  # backward search (§5.3)
+        if self.use_pallas:                            # backward search (§5.3)
+            dist = self._sweep_bucketed(dist, self._b_bkt)
+        else:
+            dist = _sweep(dist, *self._b)
         return dist
 
     def _sssp_impl(self, sources_perm: jnp.ndarray, core_mode: str):

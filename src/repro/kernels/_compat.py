@@ -1,0 +1,14 @@
+"""Version shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; kernels import :func:`tpu_compiler_params` so the same
+source runs on both sides of the rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    return _CompilerParams(**kwargs)

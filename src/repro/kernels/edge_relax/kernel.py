@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .._compat import tpu_compiler_params
 
 INF = float("inf")
 
@@ -59,7 +60,7 @@ def relax_bucketed_pallas(gathered: jnp.ndarray, w: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bs_, bm_), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((ss, mm), cur.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(gathered, w, cur)

@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from .._compat import tpu_compiler_params
 
 INF = float("inf")  # python literal: kernels must not capture traced consts
 KI = 8  # inner K sub-chunk: [bm, KI, bn] is the largest VMEM intermediate
@@ -64,7 +64,7 @@ def minplus_pallas(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
         ],
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kq: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mm, nn), a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

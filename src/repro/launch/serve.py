@@ -1,18 +1,263 @@
-"""Serving driver: batched SSD/SSSP queries over a HoD index (the paper's
-workload) or LM decode — request batching, latency percentiles.
+"""Batched HoD query serving (DESIGN.md §6): async request coalescing,
+fixed jit batch shapes, an LRU source-row cache, and modeled disk cost.
+
+The paper's flagship workload (closeness centrality, Table 5) issues
+hundreds of SSD queries; the ROADMAP north-star is the same shape at
+traffic scale — many independent clients, each asking for one source.
+:class:`QueryServer` sits between the two: it accepts an async request
+stream, coalesces sources into fixed-size batches (padding to the jit'd
+batch shape so no request triggers a recompile), answers repeats from an
+LRU cache of recent source rows, and meters the index scan each batch
+would cost on disk through the block-I/O model (DESIGN.md §7) — one scan
+of F_f + core + F_b *per batch*, which is exactly the amortization HoD's
+sweep structure buys (every source in the batch shares the scan).
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 32
+    PYTHONPATH=src python -m repro.launch.serve --rate 500 --use-pallas
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import collections
+import dataclasses
 import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..core import (BuildConfig, QueryEngine, grid_road_graph, pack_index,
+                    power_law_digraph)
 from ..core.build_fast import build_hod_fast
-from ..core import (BuildConfig, QueryEngine,  grid_road_graph,
-                    pack_index, power_law_digraph)
+from ..core.io_sim import BlockDevice, IOStats
+
+__all__ = ["QueryResult", "ServerStats", "QueryServer"]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One answered request."""
+
+    source: int
+    dist: np.ndarray                    # [n] distances, original node order
+    pred: Optional[np.ndarray] = None   # [n] predecessors (SSSP mode only)
+    latency_s: float = 0.0              # submit -> answer (includes waiting)
+    batched_with: int = 1               # real requests sharing the batch
+    cached: bool = False                # answered from the LRU cache
+    io_bytes: float = 0.0               # this request's share of the scan
+
+
+@dataclasses.dataclass
+class ServerStats:
+    requests: int = 0
+    batches: int = 0
+    cache_hits: int = 0
+    padded_slots: int = 0               # jit-shape filler rows executed
+    busy_seconds: float = 0.0           # time inside the engine
+
+    def throughput(self) -> float:
+        return self.requests / self.busy_seconds if self.busy_seconds else 0.0
+
+
+class QueryServer:
+    """Coalesces SSD/SSSP requests into fixed-size batched sweeps.
+
+    Every batch runs at exactly ``batch_size`` sources — short batches are
+    padded by repeating the last source — so the engine compiles one
+    batch shape once.  ``max_wait_ms`` bounds how long a lone request waits
+    for co-riders before a partial batch is flushed anyway.
+    """
+
+    def __init__(self, engine: QueryEngine, batch_size: int = 32,
+                 max_wait_ms: float = 2.0, cache_entries: int = 1024,
+                 sssp: bool = False, device: Optional[BlockDevice] = None):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.engine = engine
+        self.batch_size = int(batch_size)
+        self.max_wait_ms = float(max_wait_ms)
+        self.cache_entries = int(cache_entries)
+        self.sssp = bool(sssp)
+        self.device = device or BlockDevice()
+        self.stats = ServerStats()
+        self._cache: "collections.OrderedDict[Tuple[bool, int], tuple]" = \
+            collections.OrderedDict()
+        self._pending: List[Tuple[int, asyncio.Future, float]] = []
+        self._timer: Optional[asyncio.Task] = None
+
+        ix = engine.index
+        # One query's disk cost = one sequential scan of the index files
+        # (paper §5: traversal order == file order); a batch shares it.
+        # The core search reads the dense closure OR the raw CSR, never
+        # both — charge whichever this engine's core_mode actually scans.
+        core_bytes = (ix.core_closure.nbytes if engine.core_mode == "closure"
+                      else ix.core_ptr.nbytes + ix.core_dst.nbytes
+                      + ix.core_w.nbytes)
+        self._sweep_bytes = (
+            ix.f_src.nbytes + ix.f_dst.nbytes + ix.f_w.nbytes
+            + ix.b_src.nbytes + ix.b_dst.nbytes + ix.b_w.nbytes
+            + core_bytes)
+
+    # ------------------------------------------------------------- internals
+    def _cache_get(self, source: int):
+        key = (self.sssp, source)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, source: int, row: tuple) -> None:
+        if self.cache_entries <= 0:
+            return
+        key = (self.sssp, source)
+        self._cache[key] = row
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_entries:
+            self._cache.popitem(last=False)
+
+    def _execute(self, sources: np.ndarray) -> List[tuple]:
+        """Run one padded batch; returns one (dist, pred) row per source."""
+        fill = sources.shape[0]
+        batch = sources
+        if fill < self.batch_size:     # pad to the compiled shape
+            batch = np.pad(sources, (0, self.batch_size - fill), mode="edge")
+        t0 = time.perf_counter()
+        if self.sssp:
+            dist, pred = self.engine.sssp(batch)
+        else:
+            dist, pred = self.engine.ssd(batch), None
+        self.stats.busy_seconds += time.perf_counter() - t0
+        self.stats.batches += 1
+        self.stats.padded_slots += self.batch_size - fill
+        self.device.sequential(self._sweep_bytes)
+        rows = []
+        for i, s in enumerate(sources.tolist()):
+            row = (dist[i].copy(), None if pred is None else pred[i].copy())
+            self._cache_put(int(s), row)
+            rows.append(row)
+        return rows
+
+    # ------------------------------------------------------------- sync path
+    def warmup(self) -> None:
+        """Trigger the one-and-only jit compile outside the latency path."""
+        self._execute(np.zeros(1, dtype=np.int32))
+        self.stats = ServerStats()
+        self.device.reset()
+        self._cache.clear()   # the warmup row must not count as a hit
+
+    def serve_stream(self, sources: np.ndarray) -> List[QueryResult]:
+        """Closed-loop driver: answer a request list in arrival order.
+
+        All requests of a chunk arrive together, so each one's
+        ``latency_s`` is the full chunk wall time (submit → answer, same
+        semantics as the async path) — divide by ``batched_with`` for the
+        amortized per-query cost.
+        """
+        sources = np.asarray(sources, dtype=np.int32)
+        out: List[QueryResult] = []
+        for lo in range(0, sources.shape[0], self.batch_size):
+            chunk = sources[lo: lo + self.batch_size]
+            t0 = time.perf_counter()
+            misses = sorted({int(s) for s in chunk.tolist()
+                             if self._cache_get(int(s)) is None})
+            miss_rows: Dict[int, tuple] = {}
+            if misses:
+                uniq = np.asarray(misses, dtype=np.int32)
+                for s, row in zip(misses, self._execute(uniq)):
+                    miss_rows[s] = row
+            lat = time.perf_counter() - t0
+            share = self._sweep_bytes / len(misses) if misses else 0.0
+            charged = set()   # charge each missed source's share once
+            for s in chunk.tolist():
+                cached = s not in miss_rows
+                row = miss_rows.get(s) or self._cache_get(s)
+                self.stats.requests += 1
+                self.stats.cache_hits += cached
+                out.append(QueryResult(
+                    source=s, dist=row[0], pred=row[1],
+                    latency_s=lat, batched_with=chunk.shape[0],
+                    cached=cached,
+                    io_bytes=0.0 if (cached or s in charged) else share))
+                charged.add(s)
+        return out
+
+    # ------------------------------------------------------------ async path
+    async def submit(self, source: int) -> QueryResult:
+        """Enqueue one request; resolves when its batch executes (or on a
+        cache hit, immediately)."""
+        source = int(source)
+        t0 = time.perf_counter()
+        hit = self._cache_get(source)
+        if hit is not None:
+            self.stats.requests += 1
+            self.stats.cache_hits += 1
+            return QueryResult(source=source, dist=hit[0], pred=hit[1],
+                               latency_s=time.perf_counter() - t0,
+                               cached=True)
+        fut = asyncio.get_running_loop().create_future()
+        self._pending.append((source, fut, t0))
+        if len(self._pending) >= self.batch_size:
+            self._flush(include_partial=False)
+        elif self._timer is None:
+            self._timer = asyncio.create_task(self._flush_later())
+        return await fut
+
+    async def _flush_later(self) -> None:
+        await asyncio.sleep(self.max_wait_ms / 1e3)
+        self._timer = None
+        self._flush()
+
+    def _flush(self, include_partial: bool = True) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        while self._pending and (include_partial
+                                 or len(self._pending) >= self.batch_size):
+            take, self._pending = (self._pending[: self.batch_size],
+                                   self._pending[self.batch_size:])
+            srcs = np.asarray([s for s, _, _ in take], dtype=np.int32)
+            try:
+                rows = self._execute(srcs)
+            except Exception as exc:
+                # Never strand co-riders: a poisoned batch (e.g. an
+                # out-of-range source) fails every request in it.
+                for _, fut, _ in take:
+                    if not fut.done():
+                        fut.set_exception(exc)
+                continue
+            share = self._sweep_bytes / len(take)
+            now = time.perf_counter()
+            for (s, fut, t0), row in zip(take, rows):
+                self.stats.requests += 1
+                if not fut.done():
+                    fut.set_result(QueryResult(
+                        source=s, dist=row[0], pred=row[1],
+                        latency_s=now - t0, batched_with=len(take),
+                        io_bytes=share))
+        if self._pending and self._timer is None:
+            self._timer = asyncio.create_task(self._flush_later())
+
+    async def drain(self) -> None:
+        """Flush every queued request (shutdown / end of trace)."""
+        self._flush()
+
+    # ------------------------------------------------------------- reporting
+    def modeled_io(self) -> IOStats:
+        return self.device.stats
+
+
+# --------------------------------------------------------------------- CLI
+async def _open_loop(server: QueryServer, sources: np.ndarray,
+                     rate: float, seed: int = 0) -> List[QueryResult]:
+    """Poisson arrivals at `rate` req/s; returns per-request results."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, sources.shape[0])
+    tasks = []
+    for s, gap in zip(sources.tolist(), gaps.tolist()):
+        tasks.append(asyncio.create_task(server.submit(s)))
+        await asyncio.sleep(gap)
+    await server.drain()
+    return list(await asyncio.gather(*tasks))
 
 
 def main() -> None:
@@ -22,6 +267,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--sssp", action="store_true")
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--cache", type=int, default=1024)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="req/s for open-loop Poisson arrivals (0 = closed)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard batches over all local devices (shardlib)")
     args = ap.parse_args()
 
     g = (grid_road_graph(args.side) if args.graph == "road"
@@ -29,33 +281,50 @@ def main() -> None:
     print(f"graph: n={g.n} m={g.m}")
     t0 = time.perf_counter()
     res = build_hod_fast(g, BuildConfig(max_core_nodes=512,
-                                   max_core_edges=1 << 15))
+                                        max_core_edges=1 << 15))
     ix = pack_index(g, res, chunk=2048)
     print(f"index built in {time.perf_counter()-t0:.1f}s "
           f"({ix.n_levels} levels, core {ix.n_core}, "
           f"{res.stats.shortcuts_added} shortcuts)")
-    eng = QueryEngine(ix)
+    eng = QueryEngine(ix, use_pallas=args.use_pallas)
+    server = QueryServer(eng, batch_size=args.batch, sssp=args.sssp,
+                         cache_entries=args.cache,
+                         max_wait_ms=args.max_wait_ms)
 
     rng = np.random.default_rng(0)
     sources = rng.integers(0, g.n, args.requests).astype(np.int32)
-    lat = []
-    for lo in range(0, args.requests, args.batch):
-        batch = sources[lo: lo + args.batch]
-        if batch.shape[0] < args.batch:
-            batch = np.pad(batch, (0, args.batch - batch.shape[0]),
-                           mode="edge")
-        t0 = time.perf_counter()
-        if args.sssp:
-            eng.sssp(batch)
-        else:
-            eng.ssd(batch)
-        lat.append((time.perf_counter() - t0) / batch.shape[0])
-    lat = np.array(lat) * 1e3
-    print(f"served {args.requests} {'SSSP' if args.sssp else 'SSD'} "
-          f"queries, batch={args.batch}")
-    print(f"per-query latency: mean {lat.mean():.2f} ms  "
+
+    def drive():
+        server.warmup()
+        if args.rate > 0:
+            return asyncio.run(_open_loop(server, sources, args.rate))
+        return server.serve_stream(sources)
+
+    if args.data_parallel:
+        import jax
+
+        from .. import shardlib as sl
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        with sl.axis_rules(mesh, {"batch": "data"}):
+            results = drive()
+        print(f"data-parallel over {len(jax.devices())} device(s)")
+    else:
+        results = drive()
+
+    lat = np.array([r.latency_s for r in results]) * 1e3
+    st = server.stats
+    io = server.modeled_io()
+    print(f"served {st.requests} {'SSSP' if args.sssp else 'SSD'} requests "
+          f"in {st.batches} batches (batch={args.batch}, "
+          f"{st.cache_hits} cache hits, {st.padded_slots} padded slots)")
+    print(f"latency: mean {lat.mean():.2f} ms  "
           f"p50 {np.percentile(lat, 50):.2f}  "
+          f"p95 {np.percentile(lat, 95):.2f}  "
           f"p99 {np.percentile(lat, 99):.2f} ms")
+    print(f"throughput: {st.throughput():.0f} queries/s (engine-busy basis)")
+    print(f"modeled disk: {io.seq_blocks} seq blocks, "
+          f"{io.modeled_seconds()*1e3:.1f} ms total, "
+          f"{io.modeled_seconds()/max(st.requests,1)*1e3:.2f} ms/query")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# ``shard_map`` graduated from jax.experimental (where its replication
+# checker is spelled ``check_rep``) to ``jax.shard_map`` (``check_vma``).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # pragma: no cover - exercised on older JAX only
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 __all__ = [
     "AxisRules", "axis_rules", "current_rules", "current_mesh",
     "logical_to_spec", "shard", "sharding_for", "maybe_shard_map",
@@ -83,9 +92,11 @@ def logical_to_spec(*names: Optional[str]) -> P:
         used.update(ax_t)
         if not ax_t:
             parts.append(None)
-        elif len(ax_t) == 1:
+        elif isinstance(ax, str):
             parts.append(ax_t[0])
         else:
+            # Preserve tuple form for tuple-valued rules: PartitionSpec
+            # does not normalize ('data',) == 'data' on every JAX version.
             parts.append(ax_t)
     while parts and parts[-1] is None:
         parts.pop()
@@ -168,7 +179,9 @@ def axis_index(axes: Sequence[str]):
         return jnp.int32(0)
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        size = (jax.lax.axis_size(a) if hasattr(jax.lax, "axis_size")
+                else jax.lax.psum(1, a))
+        idx = idx * size + jax.lax.axis_index(a)
     return idx
 
 
@@ -183,5 +196,5 @@ def maybe_shard_map(fn: Callable, in_specs, out_specs) -> Callable:
     mesh = current_mesh()
     if mesh is None:
         return fn
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **_SHARD_MAP_KW)

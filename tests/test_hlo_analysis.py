@@ -50,10 +50,11 @@ def test_collectives_in_loops_counted():
         out, _ = jax.lax.scan(body, x, None, length=7)
         return out
 
+    from repro.shardlib import _SHARD_MAP_KW, _shard_map
     with mesh:
-        g = jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-                          out_specs=jax.sharding.PartitionSpec(),
-                          check_vma=False)
+        g = _shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                       out_specs=jax.sharding.PartitionSpec(),
+                       **_SHARD_MAP_KW)
         c = jax.jit(g).lower(
             jax.ShapeDtypeStruct((m, m), jnp.float32)).compile()
     r = analyze(c.as_text())

@@ -1,12 +1,13 @@
-"""HoD end-to-end correctness vs the Dijkstra oracle (+ hypothesis)."""
-import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+"""HoD end-to-end correctness vs the Dijkstra oracle.
 
+Property-based tests live in test_hod_property.py behind an importorskip
+on ``hypothesis`` (a dev extra), so this module always collects.
+"""
+import numpy as np
 import pytest as _pytest
 
 from repro.core import (BuildConfig, QueryEngine, build_hod,
-                        dijkstra_reference, from_edges, gnm_random_digraph,
+                        dijkstra_reference, gnm_random_digraph,
                         grid_road_graph, pack_index, power_law_digraph,
                         symmetrize)
 from repro.core.build_fast import build_hod_fast
@@ -138,53 +139,103 @@ def test_batched_equals_single():
         assert np.array_equal(batch[i], single[0])
 
 
-@st.composite
-def random_graphs(draw):
-    n = draw(st.integers(8, 60))
-    m = draw(st.integers(n, 4 * n))
-    seed = draw(st.integers(0, 10_000))
-    rng = np.random.default_rng(seed)
+def test_pallas_sweeps_match_reference():
+    """use_pallas=True routes the forward/backward sweeps through the
+    bucketed Pallas kernel (interpret mode on CPU) and must agree with the
+    pure-jnp chunk sweeps AND the Dijkstra oracle on weighted digraphs."""
+    for n, m, seed in [(120, 500, 0), (200, 900, 1), (150, 400, 2)]:
+        g = gnm_random_digraph(n, m, seed=seed, weighted=True)
+        res = build_hod(g, CFG)
+        ix = pack_index(g, res, chunk=64)
+        sources = np.array([0, n // 3, n - 1], dtype=np.int32)
+        oracle = dijkstra_reference(g, sources)
+        d_jnp = QueryEngine(ix, use_pallas=False).ssd(sources)[:, :n]
+        d_pal = QueryEngine(ix, use_pallas=True).ssd(sources)[:, :n]
+        finite = np.isfinite(oracle)
+        assert np.allclose(d_pal[finite], oracle[finite], atol=1e-4,
+                           rtol=1e-5)
+        assert np.all(np.isinf(d_pal[~finite]))
+        np.testing.assert_allclose(d_pal, d_jnp, rtol=1e-6)
+
+
+def test_sssp_pallas_paths_valid():
+    """SSSP reconstruction on top of Pallas-swept distances still unfolds
+    into length-correct paths."""
+    g = gnm_random_digraph(150, 700, seed=17)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    sources = np.array([3], dtype=np.int32)
+    oracle = dijkstra_reference(g, sources)
+    eng = QueryEngine(ix, use_pallas=True)
+    targets = [t for t in range(0, g.n, 13) if np.isfinite(oracle[0, t])]
+    paths = eng.paths(np.repeat(sources, len(targets)),
+                      np.asarray(targets, dtype=np.int32))
+    adj = {}
+    src, dst, w = g.edge_list()
+    for a, b, ww in zip(src.tolist(), dst.tolist(), w.tolist()):
+        adj[(a, b)] = min(adj.get((a, b), np.inf), ww)
+    for t, path in zip(targets, paths):
+        assert path is not None and path[0] == 3 and path[-1] == t
+        total = sum(adj[(a, b)] for a, b in zip(path, path[1:]))
+        assert np.isclose(total, oracle[0, t], rtol=1e-5)
+
+
+def test_sssp_nonzero_eps_tolerates_float_ties():
+    """eps > 0 widens the tightness test: reconstruction must still give
+    valid (length-correct within eps slack) paths on float-heavy weights."""
+    rng = np.random.default_rng(5)
+    n, m = 120, 600
     src = rng.integers(0, n, m)
     dst = rng.integers(0, n, m)
-    w = rng.integers(1, 9, m).astype(np.float64)
+    w = rng.uniform(0.1, 1.0, m)
     keep = src != dst
-    return n, src[keep], dst[keep], w[keep], seed
-
-
-@settings(max_examples=25, deadline=None)
-@given(random_graphs())
-def test_property_hod_matches_dijkstra(data):
-    n, src, dst, w, seed = data
-    if src.size == 0:
-        return
-    g = from_edges(n, src, dst, w)
-    cfg = BuildConfig(max_core_nodes=8, max_core_edges=256, seed=seed % 7)
-    res = build_hod(g, cfg)
-    ix = pack_index(g, res, chunk=32)
-    sources = np.array([0, n // 2, n - 1], dtype=np.int32)
+    from repro.core import from_edges
+    g = from_edges(n, src[keep], dst[keep], w[keep])
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    eng = QueryEngine(ix, eps=1e-5)
+    sources = np.array([0, 7], dtype=np.int32)
+    dist, pred = eng.sssp(sources)
     oracle = dijkstra_reference(g, sources)
-    d = QueryEngine(ix).ssd(sources)[:, :n]
-    finite = np.isfinite(oracle)
-    assert np.allclose(d[finite], oracle[finite], rtol=1e-5)
-    assert np.all(np.isinf(d[~finite]))
+    adj = {}
+    es, ed, ew = g.edge_list()
+    for a, b, ww in zip(es.tolist(), ed.tolist(), ew.tolist()):
+        adj[(a, b)] = min(adj.get((a, b), np.inf), ww)
+    for i, s in enumerate(sources.tolist()):
+        for t in range(0, n, 11):
+            if not np.isfinite(oracle[i, t]) or t == s:
+                continue
+            cur, total, hops = t, 0.0, 0
+            while cur != s:
+                p = int(pred[i, cur])
+                assert p >= 0 and (p, cur) in adj
+                total += adj[(p, cur)]
+                cur = p
+                hops += 1
+                assert hops <= n
+            # eps-relaxed tightness admits near-ties; the unfolded path can
+            # be longer than optimal by at most ~eps·(1+dist) per hop
+            assert total <= oracle[i, t] + 1e-4 * (hops + 1)
 
 
-@settings(max_examples=10, deadline=None)
-@given(random_graphs())
-def test_property_shortcut_lengths_never_shorter(data):
-    """Augmentation soundness: added shortcuts can only match (never beat)
-    true distances — the invariant behind §4.1's 'retaining e is safe'."""
-    n, src, dst, w, seed = data
-    if src.size == 0:
-        return
-    g = from_edges(n, src, dst, w)
-    res = build_hod(g, BuildConfig(max_core_nodes=8, max_core_edges=256))
-    oracle = dijkstra_reference(g, np.arange(n, dtype=np.int32))
-    for v in res.removal_order:
-        for (u, ww, _) in res.f_adj[v]:
-            assert ww >= oracle[v, u] - 1e-9
-        for (u, ww, _) in res.b_adj[v]:
-            assert ww >= oracle[u, v] - 1e-9
+def test_sssp_unreachable_targets():
+    """Disconnected targets: dist inf, pred -1, paths() returns None."""
+    from repro.core import from_edges
+    # two components: 0-1-2 chain and 3-4 chain
+    g = from_edges(6, np.array([0, 1, 3]), np.array([1, 2, 4]),
+                   np.array([1.0, 1.0, 1.0]))
+    res = build_hod(g, BuildConfig(max_core_nodes=4, max_core_edges=64))
+    ix = pack_index(g, res, chunk=16)
+    for use_pallas in (False, True):
+        eng = QueryEngine(ix, use_pallas=use_pallas)
+        dist, pred = eng.sssp(np.array([0], dtype=np.int32))
+        assert np.isinf(dist[0, 3]) and np.isinf(dist[0, 4]) \
+            and np.isinf(dist[0, 5])
+        assert pred[0, 3] == -1 and pred[0, 4] == -1 and pred[0, 5] == -1
+        paths = eng.paths(np.array([0, 0], dtype=np.int32),
+                          np.array([2, 4], dtype=np.int32))
+        assert paths[0] == [0, 1, 2]
+        assert paths[1] is None
 
 
 def test_closeness_estimation_runs():

@@ -1,0 +1,64 @@
+"""Property-based HoD correctness (random graphs vs the Dijkstra oracle).
+
+Kept separate from test_hod_correctness.py so environments without
+``hypothesis`` (declared in the ``dev`` extra) skip these instead of
+failing collection for the whole suite.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (BuildConfig, QueryEngine, build_hod,  # noqa: E402
+                        dijkstra_reference, from_edges)
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(8, 60))
+    m = draw(st.integers(n, 4 * n))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.integers(1, 9, m).astype(np.float64)
+    keep = src != dst
+    return n, src[keep], dst[keep], w[keep], seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_property_hod_matches_dijkstra(data):
+    n, src, dst, w, seed = data
+    if src.size == 0:
+        return
+    g = from_edges(n, src, dst, w)
+    cfg = BuildConfig(max_core_nodes=8, max_core_edges=256, seed=seed % 7)
+    res = build_hod(g, cfg)
+    from repro.core import pack_index
+    ix = pack_index(g, res, chunk=32)
+    sources = np.array([0, n // 2, n - 1], dtype=np.int32)
+    oracle = dijkstra_reference(g, sources)
+    d = QueryEngine(ix).ssd(sources)[:, :n]
+    finite = np.isfinite(oracle)
+    assert np.allclose(d[finite], oracle[finite], rtol=1e-5)
+    assert np.all(np.isinf(d[~finite]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(random_graphs())
+def test_property_shortcut_lengths_never_shorter(data):
+    """Augmentation soundness: added shortcuts can only match (never beat)
+    true distances — the invariant behind §4.1's 'retaining e is safe'."""
+    n, src, dst, w, seed = data
+    if src.size == 0:
+        return
+    g = from_edges(n, src, dst, w)
+    res = build_hod(g, BuildConfig(max_core_nodes=8, max_core_edges=256))
+    oracle = dijkstra_reference(g, np.arange(n, dtype=np.int32))
+    for v in res.removal_order:
+        for (u, ww, _) in res.f_adj[v]:
+            assert ww >= oracle[v, u] - 1e-9
+        for (u, ww, _) in res.b_adj[v]:
+            assert ww >= oracle[u, v] - 1e-9

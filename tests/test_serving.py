@@ -1,0 +1,177 @@
+"""QueryServer: batching, padding, LRU cache, async coalescing, modeled
+I/O amortization, and the sharded batch axis."""
+import asyncio
+
+import numpy as np
+import pytest
+
+import repro.shardlib as sl
+from repro.core import (BuildConfig, QueryEngine, build_hod,
+                        dijkstra_reference, gnm_random_digraph, pack_index)
+from repro.launch.serve import QueryServer
+
+CFG = BuildConfig(max_core_nodes=32, max_core_edges=1024, seed=0)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    g = gnm_random_digraph(150, 600, seed=4)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    eng = QueryEngine(ix)
+    eng._graph = g  # stash for oracle checks
+    return eng
+
+
+def test_serve_stream_matches_engine(engine):
+    server = QueryServer(engine, batch_size=8)
+    sources = np.array([3, 1, 4, 1, 5, 9, 2, 6, 5, 3], dtype=np.int32)
+    results = server.serve_stream(sources)
+    assert [r.source for r in results] == sources.tolist()
+    direct = engine.ssd(np.unique(sources))
+    by_src = {int(s): direct[i] for i, s in enumerate(np.unique(sources))}
+    for r in results:
+        np.testing.assert_array_equal(r.dist, by_src[r.source])
+    assert server.stats.requests == 10
+
+
+def test_padding_keeps_one_compiled_shape(engine):
+    server = QueryServer(engine, batch_size=16)
+    server.serve_stream(np.array([1, 2, 3], dtype=np.int32))
+    assert server.stats.batches == 1
+    assert server.stats.padded_slots == 13   # 16 - 3 real sources
+
+
+def test_lru_cache_hits_and_eviction(engine):
+    server = QueryServer(engine, batch_size=4, cache_entries=4)
+    server.serve_stream(np.array([0, 1, 2, 3], dtype=np.int32))
+    assert server.stats.cache_hits == 0
+    server.serve_stream(np.array([0, 1, 2, 3], dtype=np.int32))
+    assert server.stats.cache_hits == 4      # all repeats served from cache
+    assert server.stats.batches == 1         # no second engine call
+    # 4 new sources evict the old entries (capacity 4)
+    server.serve_stream(np.array([10, 11, 12, 13], dtype=np.int32))
+    server.serve_stream(np.array([0], dtype=np.int32))
+    assert server.stats.batches == 3         # 0 was evicted -> re-executed
+
+
+def test_cache_disabled(engine):
+    server = QueryServer(engine, batch_size=2, cache_entries=0)
+    server.serve_stream(np.array([5, 5], dtype=np.int32))
+    server.serve_stream(np.array([5, 5], dtype=np.int32))
+    assert server.stats.cache_hits == 0
+    assert server.stats.batches == 2
+
+
+def test_modeled_io_amortizes_with_batch_size(engine):
+    sources = np.arange(32, dtype=np.int32)
+    per_query = {}
+    for b in (1, 8):
+        server = QueryServer(engine, batch_size=b, cache_entries=0)
+        server.serve_stream(sources)
+        io = server.modeled_io()
+        per_query[b] = io.modeled_seconds() / server.stats.requests
+        assert io.rand_blocks == 0           # scans only — the paper's point
+    assert per_query[8] < per_query[1] / 4   # near-linear amortization
+
+
+def test_sssp_mode_returns_predecessors(engine):
+    server = QueryServer(engine, batch_size=4, sssp=True)
+    results = server.serve_stream(np.array([0, 7], dtype=np.int32))
+    dist, pred = engine.sssp(np.array([0, 7], dtype=np.int32))
+    for i, r in enumerate(results):
+        assert r.pred is not None
+        np.testing.assert_array_equal(r.dist, dist[i])
+        np.testing.assert_array_equal(r.pred, pred[i])
+
+
+def test_async_submit_coalesces(engine):
+    server = QueryServer(engine, batch_size=4, max_wait_ms=5.0)
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(s))
+                 for s in [1, 2, 3, 4, 5, 6]]
+        await server.drain()
+        return await asyncio.gather(*tasks)
+
+    results = asyncio.run(drive())
+    assert server.stats.requests == 6
+    # first four coalesced into one full batch; the rest drained
+    assert results[0].batched_with == 4
+    direct = engine.ssd(np.array([1, 2, 3, 4, 5, 6], dtype=np.int32))
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(r.dist, direct[i])
+
+
+def test_async_partial_flush_on_timeout(engine):
+    server = QueryServer(engine, batch_size=64, max_wait_ms=1.0)
+
+    async def drive():
+        return await server.submit(9)   # alone: must not wait forever
+
+    r = asyncio.run(drive())
+    assert r.source == 9 and server.stats.batches == 1
+    np.testing.assert_array_equal(
+        r.dist, engine.ssd(np.array([9], dtype=np.int32))[0])
+
+
+def test_async_cache_hit_resolves_immediately(engine):
+    server = QueryServer(engine, batch_size=2, max_wait_ms=1.0)
+
+    async def drive():
+        a = await server.submit(11)
+        b = await server.submit(11)
+        return a, b
+
+    a, b = asyncio.run(drive())
+    assert not a.cached and b.cached
+    np.testing.assert_array_equal(a.dist, b.dist)
+
+
+def test_async_poisoned_batch_fails_all_riders(engine):
+    """An out-of-range source must fail its whole batch with an exception
+    instead of stranding co-rider futures forever."""
+    server = QueryServer(engine, batch_size=2, max_wait_ms=1.0)
+
+    async def drive():
+        good = asyncio.create_task(server.submit(1))
+        bad = asyncio.create_task(server.submit(10**9))   # >> n
+        return await asyncio.gather(good, bad, return_exceptions=True)
+
+    results = asyncio.run(asyncio.wait_for(drive(), timeout=30))
+    assert all(isinstance(r, Exception) for r in results)
+
+
+def test_serve_stream_io_bytes_sum_matches_device(engine):
+    """Per-request io_bytes shares (with duplicates uncharged) must sum to
+    exactly what the BlockDevice metered."""
+    server = QueryServer(engine, batch_size=4, cache_entries=0)
+    results = server.serve_stream(np.array([5, 5, 6, 7], dtype=np.int32))
+    assert sum(r.io_bytes for r in results) == \
+        pytest.approx(server._sweep_bytes)
+    assert server.modeled_io().bytes_seq == server._sweep_bytes
+
+
+def test_sharded_batch_axis_matches_unsharded(engine):
+    """Under a mesh with rules binding "batch", sweeps run data-parallel
+    over sources and must produce identical distances (world size 1)."""
+    import jax
+
+    sources = np.array([0, 3, 5, 7], dtype=np.int32)
+    plain = engine.ssd(sources)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    eng2 = QueryEngine(engine.index)
+    with sl.axis_rules(mesh, {"batch": "data"}):
+        sharded = eng2.ssd(sources)
+    np.testing.assert_array_equal(plain, sharded)
+
+
+def test_server_results_match_oracle(engine):
+    g = engine._graph
+    sources = np.array([2, 40, 77], dtype=np.int32)
+    server = QueryServer(engine, batch_size=3)
+    results = server.serve_stream(sources)
+    oracle = dijkstra_reference(g, sources)
+    for r, orc in zip(results, oracle):
+        finite = np.isfinite(orc)
+        assert np.allclose(r.dist[:g.n][finite], orc[finite], rtol=1e-5)
