@@ -4,18 +4,49 @@ size — the amortization claim behind the whole serving design (DESIGN.md
 I/O per query falls linearly with batch size while measured throughput
 rises until the sweeps saturate the device.
 
+Also reports the cold-start path the SweepPlan is for (DESIGN.md §5):
+index ``.npz`` load → engine construction → warm-start compile → first
+answered request, in wall-clock ms.  Since the plan is persisted in the
+index file, load never re-derives the bucketed layout, and the executor
+compiles O(1) traces regardless of level count.
+
     PYTHONPATH=src python -m benchmarks.run --tables serve
 """
 from __future__ import annotations
 
+import os
+import tempfile
+import time
+
 import numpy as np
 
+from repro.core import QueryEngine
+from repro.core.index import HoDIndex
 from repro.launch.serve import QueryServer
 
 from .common import build_hod_cached, dataset_suite, fmt_row
 
 BATCH_SIZES = (1, 16, 128)
 N_REQUESTS = 256
+COLD_BATCH = 16
+
+
+def cold_start_latency(ix) -> dict:
+    """Measure index-load → first-response wall time via a real save/load
+    round trip (the restart path a serving fleet actually takes)."""
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "index.npz")
+        ix.save(path)
+        t0 = time.perf_counter()
+        loaded = HoDIndex.load(path)
+        t_load = time.perf_counter() - t0
+        engine = QueryEngine(loaded)
+        server = QueryServer(engine, batch_size=COLD_BATCH,
+                             cache_entries=0, warm_start=True)
+        t_warm = time.perf_counter() - t0
+        server.serve_stream(np.zeros(1, dtype=np.int32))
+        t_first = time.perf_counter() - t0
+    return {"load_s": t_load, "warm_s": t_warm, "first_s": t_first}
 
 
 def run(dataset: str = "USRN-like") -> None:
@@ -43,6 +74,12 @@ def run(dataset: str = "USRN-like") -> None:
             f"{io_s/st.requests*1e3:.2f}",
             f"{io_s/st.batches*1e3:.1f}", io.seq_blocks]))
         assert all(np.isfinite(r.dist[: g.n]).all() for r in results)
+
+    cold = cold_start_latency(art.index)
+    print(f"cold start (batch={COLD_BATCH}): index load "
+          f"{cold['load_s']*1e3:.0f} ms, +warm-start compile "
+          f"{cold['warm_s']*1e3:.0f} ms, load->first-response "
+          f"{cold['first_s']*1e3:.0f} ms")
 
 
 if __name__ == "__main__":

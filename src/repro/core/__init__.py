@@ -5,7 +5,8 @@ from .graph import (Digraph, from_edges, gnm_random_digraph,  # noqa: F401
                     power_law_digraph, grid_road_graph, symmetrize,
                     largest_weakly_connected_component)
 from .build import BuildConfig, BuildResult, BuildStats, build_hod  # noqa: F401
-from .index import (HoDIndex, LevelBuckets, level_buckets,  # noqa: F401
+from .index import (HoDIndex, LevelBuckets, SweepPlan,  # noqa: F401
+                    build_core_plan, build_sweep_plan, level_buckets,
                     pack_index)
 from .query import QueryEngine, dijkstra_reference  # noqa: F401
 from .closeness import estimate_closeness, ClosenessResult  # noqa: F401

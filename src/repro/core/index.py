@@ -15,7 +15,12 @@ rank order), so both query scans are sequential.  Here the same invariant —
 * the core graph is closed transitively at build time (Floyd–Warshall), so
   the query-time core search is a single min-plus matmul against the
   closure — a beyond-paper optimization; the raw core CSR is kept for the
-  paper-faithful iterative modes.
+  paper-faithful iterative modes;
+* on top of the chunk arrays, ``pack_index`` builds a :class:`SweepPlan`
+  per sweep direction — the padded, static-shape ``[L_pad, M_pad, K_fix]``
+  bucketed layout the query executor scans (DESIGN.md §5).  Plans are
+  persisted inside the ``.npz`` (format version 2) so an index load never
+  re-derives the layout; version-1 files rebuild it with a warning.
 
 Padding edges use the sentinel node ``n`` with length +inf: they relax into
 a scrap column and can never win a min.
@@ -23,6 +28,7 @@ a scrap column and can never win a min.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -30,10 +36,189 @@ import numpy as np
 from .build import BuildResult
 from .graph import Digraph
 
-__all__ = ["HoDIndex", "LevelBuckets", "level_buckets", "pack_index",
-           "floyd_warshall_closure"]
+__all__ = ["HoDIndex", "LevelBuckets", "SweepPlan", "build_sweep_plan",
+           "build_core_plan", "level_buckets", "pack_index",
+           "floyd_warshall_closure", "FORMAT_VERSION"]
 
 INF = np.float32(np.inf)
+
+#: ``.npz`` index layout version.  v1 = chunk arrays only (plans re-derived
+#: at load time); v2 = chunk arrays + serialized SweepPlans.
+FORMAT_VERSION = 2
+
+
+@dataclasses.dataclass
+class SweepPlan:
+    """Padded, static-shape per-level bucketed sweep layout (DESIGN.md §5).
+
+    All arrays share the ``[L_pad, M_pad, K_fix]`` envelope so the query
+    executor can run the whole sweep as ONE ``lax.scan`` over the level
+    axis — one jit trace regardless of how many levels the graph has.
+    Padding is absorbing under (min, +): padding rows/slots point at the
+    sentinel column with ``+inf`` weight and ``-1`` assoc, padding levels
+    are all-padding rows, and ``row_valid`` / ``level_mask`` make the
+    masking explicit for the kernel.
+    """
+
+    dst: np.ndarray         # [L_pad, M_pad]         int32, sentinel padding
+    src_idx: np.ndarray     # [L_pad, M_pad, K_fix]  int32, sentinel padding
+    w: np.ndarray           # [L_pad, M_pad, K_fix]  f32, +inf padding
+    assoc: np.ndarray       # [L_pad, M_pad, K_fix]  int32, -1 padding
+    row_valid: np.ndarray   # [L_pad, M_pad]         bool, False on padding
+    level_mask: np.ndarray  # [L_pad]                bool, False on padding
+
+    @property
+    def l_pad(self) -> int:
+        return int(self.dst.shape[0])
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.dst.shape[1])
+
+    @property
+    def k_fix(self) -> int:
+        return int(self.src_idx.shape[2])
+
+    @property
+    def n_real_levels(self) -> int:
+        return int(self.level_mask.sum())
+
+    def scan_bytes(self, include_assoc: bool = False) -> int:
+        """Modeled sequential-scan footprint of one sweep over this plan:
+        the *compact* payload a disk layout would stream — one dst id per
+        real row plus (src, w[, assoc]) per real edge.  The static
+        padding envelope is a compile-time artifact, not file content,
+        so it is not charged (charging it would inflate the paper-
+        comparable I/O numbers ~10x on level-skewed graphs)."""
+        rows = int(self.row_valid.sum())
+        edges = int(np.isfinite(self.w).sum())
+        per_edge = self.src_idx.itemsize + self.w.itemsize \
+            + (self.assoc.itemsize if include_assoc else 0)
+        return rows * self.dst.itemsize + edges * per_edge
+
+    def nbytes(self) -> int:
+        """In-memory (padded) footprint of the plan arrays."""
+        return int(self.dst.nbytes + self.src_idx.nbytes + self.w.nbytes
+                   + self.assoc.nbytes + self.row_valid.nbytes
+                   + self.level_mask.nbytes)
+
+
+def _empty_plan(k_fix: int) -> SweepPlan:
+    return SweepPlan(
+        dst=np.zeros((0, 1), np.int32),
+        src_idx=np.zeros((0, 1, k_fix), np.int32),
+        w=np.zeros((0, 1, k_fix), np.float32),
+        assoc=np.zeros((0, 1, k_fix), np.int32),
+        row_valid=np.zeros((0, 1), bool),
+        level_mask=np.zeros((0,), bool))
+
+
+def _bucket_rows(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                 assoc: np.ndarray, k_fix: int, sentinel: int):
+    """Bucket one level's edges by destination into padded ``[M, K]`` rows.
+
+    A destination with more than ``k_fix`` in-edges owns ``ceil(indeg/K)``
+    rows; splitting is lossless because rows of one destination are merged
+    by the executor's scatter-min (scatter-max for assoc reconstruction).
+    """
+    o = np.argsort(dst, kind="stable")
+    s_l, d_l, w_l, a_l = src[o], dst[o], w[o], assoc[o]
+    uniq, starts, counts = np.unique(d_l, return_index=True,
+                                     return_counts=True)
+    rows_per = -(-counts // k_fix)
+    row_off = np.concatenate([[0], np.cumsum(rows_per)])
+    grp = np.repeat(np.arange(uniq.size), counts)
+    pos = np.arange(d_l.size) - np.repeat(starts, counts)
+    row, col = row_off[grp] + pos // k_fix, pos % k_fix
+    m = int(row_off[-1])
+    src_idx = np.full((m, k_fix), sentinel, dtype=np.int32)
+    w_bkt = np.full((m, k_fix), INF, dtype=np.float32)
+    a_bkt = np.full((m, k_fix), -1, dtype=np.int32)
+    src_idx[row, col] = s_l
+    w_bkt[row, col] = w_l
+    a_bkt[row, col] = a_l
+    return (np.repeat(uniq, rows_per).astype(np.int32), src_idx, w_bkt,
+            a_bkt)
+
+
+def _stack_levels(levels, k_fix: int, sentinel: int, m_align: int = 8,
+                  l_align: int = 1) -> SweepPlan:
+    """Pad per-level ``[M_l, K]`` buckets to a common static envelope."""
+    if not levels:
+        return _empty_plan(k_fix)
+    m_pad = max(d.shape[0] for (d, _, _, _) in levels)
+    m_pad = max(m_align, -(-m_pad // m_align) * m_align)
+    l_real = len(levels)
+    l_pad = -(-l_real // l_align) * l_align
+    dst = np.full((l_pad, m_pad), sentinel, np.int32)
+    src_idx = np.full((l_pad, m_pad, k_fix), sentinel, np.int32)
+    w = np.full((l_pad, m_pad, k_fix), INF, np.float32)
+    assoc = np.full((l_pad, m_pad, k_fix), -1, np.int32)
+    row_valid = np.zeros((l_pad, m_pad), bool)
+    level_mask = np.zeros((l_pad,), bool)
+    for i, (d_l, s_l, w_l, a_l) in enumerate(levels):
+        m = d_l.shape[0]
+        dst[i, :m] = d_l
+        src_idx[i, :m] = s_l
+        w[i, :m] = w_l
+        assoc[i, :m] = a_l
+        row_valid[i, :m] = True
+        level_mask[i] = True
+    return SweepPlan(dst=dst, src_idx=src_idx, w=w, assoc=assoc,
+                     row_valid=row_valid, level_mask=level_mask)
+
+
+def build_sweep_plan(ix: "HoDIndex", forward: bool,
+                     k_cap: int = 16) -> SweepPlan:
+    """Derive a static-shape :class:`SweepPlan` from the flat chunk arrays.
+
+    The chunk arrays are level-aligned (DESIGN.md §4), so every real
+    edge's level is recoverable from its level-defining endpoint: the
+    *source* for forward edges, the *destination* for backward edges.
+    Levels are emitted in sweep order — ascending for the forward sweep,
+    descending for the backward sweep — empty levels are dropped, and the
+    survivors are padded to one common ``[M_pad, K_fix]`` rectangle.
+    """
+    if forward:
+        src, dst, w, assoc = ix.f_src, ix.f_dst, ix.f_w, ix.f_assoc
+    else:
+        src, dst, w, assoc = ix.b_src, ix.b_dst, ix.b_w, ix.b_assoc
+    src, dst = src.reshape(-1), dst.reshape(-1)
+    w, assoc = w.reshape(-1), assoc.reshape(-1)
+    real = np.isfinite(w)
+    src, dst, w, assoc = src[real], dst[real], w[real], assoc[real]
+    if src.size == 0:
+        return _empty_plan(k_cap)
+    key = src if forward else dst
+    lvl = np.searchsorted(ix.level_ptr, key, side="right") - 1
+
+    levels = []
+    order = range(ix.n_levels) if forward else range(ix.n_levels - 1, -1, -1)
+    for level in order:
+        sel = lvl == level
+        if not sel.any():
+            continue
+        levels.append(_bucket_rows(src[sel], dst[sel], w[sel], assoc[sel],
+                                   k_cap, ix.n))
+    # l_align > 1 pads the level axis too: padding levels are all-padding
+    # rows with level_mask=False, absorbed by the executor's masking.
+    return _stack_levels(levels, k_cap, ix.n, l_align=4)
+
+
+def build_core_plan(ix: "HoDIndex", k_cap: int = 16) -> SweepPlan:
+    """Bucket the raw core edges (permuted *global* ids) as a one-level
+    plan.  Distances are final when SSSP reconstruction runs, so the core
+    edges need no level structure — they ride the same executor as one
+    extra plan level (DESIGN.md §5)."""
+    if ix.core_dst.shape[0] == 0:
+        return _empty_plan(k_cap)
+    cu = np.repeat(np.arange(ix.n_core, dtype=np.int32),
+                   np.diff(ix.core_ptr))
+    src = (cu + ix.n_noncore).astype(np.int32)
+    dst = (ix.core_dst + ix.n_noncore).astype(np.int32)
+    return _stack_levels(
+        [_bucket_rows(src, dst, ix.core_w.astype(np.float32),
+                      ix.core_assoc, k_cap, ix.n)], k_cap, ix.n)
 
 
 @dataclasses.dataclass
@@ -72,8 +257,44 @@ class HoDIndex:
     core_w: np.ndarray
     core_assoc: np.ndarray    # original-id predecessor annotation
 
+    # static-shape sweep plans (DESIGN.md §5): built by pack_index,
+    # serialized since format v2, rebuilt (with a warning) for v1 files
+    plan_f: Optional[SweepPlan] = None
+    plan_b: Optional[SweepPlan] = None
+    plan_core: Optional[SweepPlan] = None
+    k_cap: int = 16
+    format_version: int = FORMAT_VERSION
+
+    def ensure_plans(self, k_cap: Optional[int] = None) -> "HoDIndex":
+        """Build any missing sweep plan in place (no-op when present).
+
+        ``k_cap`` only applies to plans being built; existing plans keep
+        the ``K_fix`` they were packed with.
+        """
+        k = int(k_cap if k_cap is not None else self.k_cap)
+        if self.plan_f is None:
+            self.plan_f = build_sweep_plan(self, forward=True, k_cap=k)
+        if self.plan_b is None:
+            self.plan_b = build_sweep_plan(self, forward=False, k_cap=k)
+        if self.plan_core is None:
+            self.plan_core = build_core_plan(self, k_cap=k)
+        return self
+
+    def plan_bytes(self) -> int:
+        """In-memory (padded) footprint of the three sweep plans.
+
+        Reported separately from :meth:`index_bytes`: the padding
+        envelope is ~10x the real payload on level-skewed graphs and
+        would swamp the paper-comparable size accounting.
+        """
+        plans = (self.plan_f, self.plan_b, self.plan_core)
+        return sum(p.nbytes() for p in plans if p is not None)
+
     def index_bytes(self) -> int:
-        """On-'disk' size of the index (Table 3 accounting)."""
+        """On-'disk' size of the index core content (Table 3 accounting:
+        chunk files + core + permutation — the paper-comparable number).
+        The v2 file additionally serializes the sweep plans; see
+        :meth:`plan_bytes` for their (padded) footprint."""
         arrays = (self.f_src, self.f_dst, self.f_w, self.f_assoc,
                   self.b_src, self.b_dst, self.b_w, self.b_assoc,
                   self.core_closure, self.core_ptr, self.core_dst,
@@ -88,25 +309,43 @@ class HoDIndex:
         return real_f + real_b + int(self.core_dst.shape[0])
 
     # -- serialization ------------------------------------------------------
+    _PLAN_PREFIXES = (("plan_f", "pf"), ("plan_b", "pb"),
+                      ("plan_core", "pc"))
+
     def save(self, path: str) -> None:
+        """Write the v2 ``.npz`` layout: chunk arrays + sweep plans."""
+        self.ensure_plans()
         meta = np.array([self.n, self.n_pad, self.n_noncore, self.n_core,
                          self.n_levels, self.chunk, self.core_diameter],
                         dtype=np.int64)
+        plans = {}
+        for field, pre in self._PLAN_PREFIXES:
+            p: SweepPlan = getattr(self, field)
+            plans[f"{pre}_dst"] = p.dst
+            plans[f"{pre}_src"] = p.src_idx
+            plans[f"{pre}_w"] = p.w
+            plans[f"{pre}_assoc"] = p.assoc
+            plans[f"{pre}_valid"] = p.row_valid
+            plans[f"{pre}_mask"] = p.level_mask
         np.savez_compressed(
-            path, meta=meta, perm=self.perm, inv_perm=self.inv_perm,
+            path, meta=meta,
+            format_version=np.int64(FORMAT_VERSION),
+            k_cap=np.int64(self.k_cap),
+            perm=self.perm, inv_perm=self.inv_perm,
             level_ptr=self.level_ptr, rank=self.rank,
             f_src=self.f_src, f_dst=self.f_dst, f_w=self.f_w,
             f_assoc=self.f_assoc, b_src=self.b_src, b_dst=self.b_dst,
             b_w=self.b_w, b_assoc=self.b_assoc,
             core_closure=self.core_closure, core_ptr=self.core_ptr,
             core_dst=self.core_dst, core_w=self.core_w,
-            core_assoc=self.core_assoc)
+            core_assoc=self.core_assoc, **plans)
 
     @staticmethod
     def load(path: str) -> "HoDIndex":
         z = np.load(path)
         meta = z["meta"]
-        return HoDIndex(
+        version = int(z["format_version"]) if "format_version" in z else 1
+        ix = HoDIndex(
             n=int(meta[0]), n_pad=int(meta[1]), n_noncore=int(meta[2]),
             n_core=int(meta[3]), n_levels=int(meta[4]), chunk=int(meta[5]),
             core_diameter=int(meta[6]), perm=z["perm"],
@@ -116,7 +355,22 @@ class HoDIndex:
             b_w=z["b_w"], b_assoc=z["b_assoc"],
             core_closure=z["core_closure"], core_ptr=z["core_ptr"],
             core_dst=z["core_dst"], core_w=z["core_w"],
-            core_assoc=z["core_assoc"])
+            core_assoc=z["core_assoc"], format_version=version,
+            k_cap=int(z["k_cap"]) if "k_cap" in z else 16)
+        if version >= 2:
+            for field, pre in HoDIndex._PLAN_PREFIXES:
+                setattr(ix, field, SweepPlan(
+                    dst=z[f"{pre}_dst"], src_idx=z[f"{pre}_src"],
+                    w=z[f"{pre}_w"], assoc=z[f"{pre}_assoc"],
+                    row_valid=z[f"{pre}_valid"],
+                    level_mask=z[f"{pre}_mask"]))
+        else:
+            warnings.warn(
+                f"{path}: old-format (v{version}) HoD index without sweep "
+                "plans — rebuilding the SweepPlan layout on the fly; "
+                "re-save the index to persist it.", stacklevel=2)
+            ix.ensure_plans()
+        return ix
 
 
 @dataclasses.dataclass
@@ -137,14 +391,12 @@ class LevelBuckets:
 
 def level_buckets(ix: "HoDIndex", forward: bool,
                   k_cap: int = 16) -> List[LevelBuckets]:
-    """Re-derive the per-level bucketed layout from the flat chunk arrays.
+    """Legacy compat path: per-level ragged-M bucket list (fixed ``K``).
 
-    The chunk arrays are level-aligned (DESIGN.md §4), so the level of every
-    real edge is recoverable from its level-defining endpoint: the *source*
-    for forward edges, the *destination* for backward edges (both are
-    removed nodes, i.e. permuted ids below ``n_noncore``).  Levels are
-    emitted in sweep order — ascending for the forward sweep, descending
-    for the backward sweep — and empty levels are skipped.
+    Superseded by :class:`SweepPlan` for query execution, kept for tools
+    that want the un-padded per-level layout.  ``K`` is always exactly
+    ``k_cap`` (not ``min(max indegree, k_cap)``), so kernel shapes are
+    uniform across levels — only the row count ``M`` varies.
     """
     if forward:
         src, dst, w = ix.f_src, ix.f_dst, ix.f_w
@@ -164,25 +416,10 @@ def level_buckets(ix: "HoDIndex", forward: bool,
         sel = lvl == level
         if not sel.any():
             continue
-        s_l, d_l, w_l = src[sel], dst[sel], w[sel]
-        o = np.argsort(d_l, kind="stable")
-        s_l, d_l, w_l = s_l[o], d_l[o], w_l[o]
-        uniq, starts, counts = np.unique(d_l, return_index=True,
-                                         return_counts=True)
-        k = int(min(counts.max(), k_cap))
-        rows_per = -(-counts // k)
-        row_off = np.concatenate([[0], np.cumsum(rows_per)])
-        grp = np.repeat(np.arange(uniq.size), counts)
-        pos = np.arange(d_l.size) - np.repeat(starts, counts)
-        row, col = row_off[grp] + pos // k, pos % k
-        m = int(row_off[-1])
-        src_idx = np.full((m, k), ix.n, dtype=np.int32)
-        w_bkt = np.full((m, k), INF, dtype=np.float32)
-        src_idx[row, col] = s_l
-        w_bkt[row, col] = w_l
-        out.append(LevelBuckets(
-            dst=np.repeat(uniq, rows_per).astype(np.int32),
-            src_idx=src_idx, w=w_bkt))
+        d_rows, src_idx, w_bkt, _ = _bucket_rows(
+            src[sel], dst[sel], w[sel],
+            np.full(int(sel.sum()), -1, np.int32), k_cap, ix.n)
+        out.append(LevelBuckets(dst=d_rows, src_idx=src_idx, w=w_bkt))
     return out
 
 
@@ -269,7 +506,8 @@ def _hop_diameter(adj: np.ndarray) -> int:
 
 
 def pack_index(g: Digraph, result: BuildResult, chunk: int = 2048,
-               node_align: int = 1, closure_limit: int = 2048) -> HoDIndex:
+               node_align: int = 1, closure_limit: int = 2048,
+               k_cap: int = 16) -> HoDIndex:
     """Convert a :class:`BuildResult` into the packed, query-ready layout.
 
     The all-pairs core closure (beyond-paper fast path) is only computed
@@ -277,6 +515,10 @@ def pack_index(g: Digraph, result: BuildResult, chunk: int = 2048,
     fill-in) fall back to the paper-faithful iterative core search; the
     stored closure is then a 0×0 placeholder and ``QueryEngine`` defaults
     to ``core_mode="bellman"``.
+
+    The static-shape sweep plans (forward, backward, core-reconstruction —
+    DESIGN.md §5) are built here once, with bucket width ``k_cap``, and
+    persisted by :meth:`HoDIndex.save`.
     """
     n = result.n
     order = list(result.removal_order)
@@ -360,7 +602,7 @@ def pack_index(g: Digraph, result: BuildResult, chunk: int = 2048,
             core_w_l.append(w_e)
             core_assoc_l.append(assoc)
 
-    return HoDIndex(
+    ix = HoDIndex(
         n=n, n_pad=int(n_pad), n_noncore=n_noncore, n_core=n_core,
         n_levels=n_levels, chunk=chunk, perm=perm, inv_perm=inv_perm,
         level_ptr=level_ptr, rank=result.rank.astype(np.int32),
@@ -370,4 +612,6 @@ def pack_index(g: Digraph, result: BuildResult, chunk: int = 2048,
         core_ptr=core_ptr,
         core_dst=np.asarray(core_dst_l, dtype=np.int32),
         core_w=np.asarray(core_w_l, dtype=np.float32),
-        core_assoc=np.asarray(core_assoc_l, dtype=np.int32))
+        core_assoc=np.asarray(core_assoc_l, dtype=np.int32),
+        k_cap=int(k_cap))
+    return ix.ensure_plans()

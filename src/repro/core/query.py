@@ -1,30 +1,39 @@
-"""HoD query processing (paper §5) as batched, level-synchronous JAX sweeps.
+"""HoD query processing (paper §5) as one compiled SweepPlan executor.
 
 An SSD query runs three phases (paper §5): a *forward search* over ``G_f``,
 a *core search* inside ``G_c``, and a *backward search* over ``G_b``.  The
 paper's key property — traversal order equals file order, so every phase is
-one sequential scan — maps onto TPU as data-independent ``lax.scan`` sweeps
-over level-aligned edge chunks:
+one sequential scan — maps onto TPU as ONE ``lax.scan`` over the levels of
+a static-shape :class:`~repro.core.index.SweepPlan` (DESIGN.md §5):
 
-* **forward**: chunks ascend rank levels; every edge goes strictly up-rank
+* **forward**: plan levels ascend rank; every edge goes strictly up-rank
   and same-rank nodes are never adjacent, so each node's distance is final
   before its out-edges are relaxed (single-pass DAG sweep);
 * **core**: one min-plus (tropical) matmul against the precomputed core
   closure (beyond-paper; the paper-faithful iterative/Dijkstra modes are
   kept for validation);
-* **backward**: chunks descend rank levels — the paper's heap-free linear
+* **backward**: plan levels descend rank — the paper's heap-free linear
   scan, verbatim.
+
+Every plan level is one fused bucketed relaxation (``relax_bucketed`` —
+Pallas kernel or jnp fallback, selected per engine, same executor either
+way).  Because the plan is padded to ``[L_pad, M_pad, K_fix]``, the scan
+body traces ONCE per sweep: trace count is independent of the graph's
+level count, and no per-level Python dispatch survives.
 
 Queries are *batched over sources* (``dist`` is ``[S, n_pad]``): the
 paper's flagship application (closeness estimation, Table 5) issues
 hundreds of SSD queries, which here amortize into dense VPU work.
 
-SSSP (paper §6) is answered by one extra *reconstruction sweep*: after
-distances are final, every augmented edge ``(u, v, w, assoc)`` with
+SSSP (paper §6) rides the SAME executor: after distances are final, each
+plan (forward, core, backward) is re-scanned with the reconstruction
+level-body — every augmented edge ``(u, v, w, assoc)`` with
 ``dist[u] + w == dist[v]`` scatters its predecessor annotation into
-``pred[v]``.  Any matching edge yields a valid shortest-path predecessor,
-so duplicate winners are harmless; correctness follows from the arch-path
-argument (Theorem 1): the realizing path's last edge is always tight.
+``pred[v]``.  The assoc slots live in the same plan buckets, so there is
+no separate reconstruction layout.  Any matching edge yields a valid
+shortest-path predecessor, so duplicate winners are harmless; correctness
+follows from the arch-path argument (Theorem 1): the realizing path's
+last edge is always tight.
 """
 from __future__ import annotations
 
@@ -38,45 +47,33 @@ import numpy as np
 
 from .. import shardlib as sl
 from ..kernels.edge_relax.ops import relax_bucketed
-from .index import HoDIndex, level_buckets
+from .index import HoDIndex, SweepPlan
 
 __all__ = ["QueryEngine", "dijkstra_reference"]
 
 INF = jnp.float32(jnp.inf)
 
 
-def _sweep(dist: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
-           w: jnp.ndarray) -> jnp.ndarray:
-    """Relax all edge chunks in order: dist[:, dst] <- min(dist[:, src]+w)."""
-    if src.shape[0] == 0:
-        return dist
-
-    def body(d, blk):
-        s, t, ww = blk
-        cand = d[:, s] + ww[None, :]
-        return d.at[:, t].min(cand), None
-
-    dist, _ = jax.lax.scan(body, dist, (src, dst, w))
-    return dist
+def _plan_to_device(plan: SweepPlan):
+    """Device-resident plan arrays, in the executor's scan order."""
+    return (jnp.asarray(plan.dst), jnp.asarray(plan.src_idx),
+            jnp.asarray(plan.w), jnp.asarray(plan.assoc),
+            jnp.asarray(plan.row_valid), jnp.asarray(plan.level_mask))
 
 
-def _recon_sweep(dist: jnp.ndarray, pred: jnp.ndarray, src: jnp.ndarray,
-                 dst: jnp.ndarray, w: jnp.ndarray, assoc: jnp.ndarray,
-                 eps: float) -> jnp.ndarray:
-    """Predecessor reconstruction: scatter assoc of tight edges (SSSP §6)."""
-    if src.shape[0] == 0:
-        return pred
-
-    def body(p, blk):
-        s, t, ww, a = blk
-        cand = dist[:, s] + ww[None, :]
-        tgt = dist[:, t]
-        matched = jnp.isfinite(cand) & (cand <= tgt + eps * (1.0 + tgt))
-        pcand = jnp.where(matched, a[None, :], -1)
-        return p.at[:, t].max(pcand), None
-
-    pred, _ = jax.lax.scan(body, pred, (src, dst, w, assoc))
-    return pred
+def _dense_core_adjacency(ix: HoDIndex) -> np.ndarray:
+    """Dense [C, C] core adjacency from the raw CSR (scatter, no Python
+    loop) — only the paper-faithful Bellman core mode reads it."""
+    c = ix.n_core
+    adj = np.full((c, c), np.inf, dtype=np.float32)
+    if c:
+        np.fill_diagonal(adj, 0.0)
+        if ix.core_dst.shape[0]:
+            cu = np.repeat(np.arange(c, dtype=np.int32),
+                           np.diff(ix.core_ptr))
+            np.minimum.at(adj, (cu, ix.core_dst),
+                          ix.core_w.astype(np.float32))
+    return adj
 
 
 def _minplus_blocked(a: jnp.ndarray, b: jnp.ndarray,
@@ -111,11 +108,13 @@ class QueryEngine:
                           bounded), closest in spirit to scanning G_c
       * ``"dijkstra"`` — paper-faithful host-side heap Dijkstra on the core
 
-    With ``use_pallas=True`` the forward/backward sweeps run through the
-    fused ``relax_bucketed`` kernel over the per-level ``[M, K]`` bucketed
-    layout (DESIGN.md §5), and the core search through the Pallas tropical
-    matmul; ``interpret`` (default: auto, on except on real TPUs) selects
-    Pallas interpret mode so the same path runs on CPU.
+    Forward/backward sweeps and SSSP reconstruction all run through the
+    single SweepPlan executor (:meth:`_run_plan`): one ``lax.scan`` over
+    static-shape plan levels.  ``use_pallas`` picks the level kernel —
+    the fused ``relax_bucketed`` Pallas kernel vs. its jnp oracle — and
+    the core search's tropical matmul flavor; ``interpret`` (default:
+    auto, on except on real TPUs) selects Pallas interpret mode so the
+    same path runs on CPU.
     """
 
     def __init__(self, index: HoDIndex, core_mode: str = "closure",
@@ -133,81 +132,79 @@ class QueryEngine:
                           if interpret is None else interpret)
         self.eps = float(eps)
 
-        if use_pallas:
-            self._f_bkt = [
-                (jnp.asarray(b.dst), jnp.asarray(b.src_idx), jnp.asarray(b.w))
-                for b in level_buckets(index, forward=True, k_cap=k_cap)]
-            self._b_bkt = [
-                (jnp.asarray(b.dst), jnp.asarray(b.src_idx), jnp.asarray(b.w))
-                for b in level_buckets(index, forward=False, k_cap=k_cap)]
-        else:
-            self._f_bkt = self._b_bkt = []
+        index.ensure_plans(k_cap)   # no-op for pack_index/v2-load indexes
+        self._plan_f = _plan_to_device(index.plan_f)
+        self._plan_b = _plan_to_device(index.plan_b)
+        self._plan_c = _plan_to_device(index.plan_core)
 
-        ix = index
-        self._f = (jnp.asarray(ix.f_src), jnp.asarray(ix.f_dst),
-                   jnp.asarray(ix.f_w))
-        self._b = (jnp.asarray(ix.b_src), jnp.asarray(ix.b_dst),
-                   jnp.asarray(ix.b_w))
-        self._f_assoc = jnp.asarray(ix.f_assoc)
-        self._b_assoc = jnp.asarray(ix.b_assoc)
-        self._perm = jnp.asarray(ix.perm)
-        self._closure = jnp.asarray(ix.core_closure)
-
-        # Dense core adjacency for the paper-faithful Bellman mode.
-        c = ix.n_core
-        adj = np.full((c, c), np.inf, dtype=np.float32)
-        if c:
-            np.fill_diagonal(adj, 0.0)
-        for cu in range(c):
-            lo, hi = ix.core_ptr[cu], ix.core_ptr[cu + 1]
-            for cv, wv in zip(ix.core_dst[lo:hi], ix.core_w[lo:hi]):
-                adj[cu, cv] = min(adj[cu, cv], wv)
-        self._core_adj = jnp.asarray(adj)
-
-        # Core edges as one reconstruction chunk set (permuted global ids).
-        if ix.core_dst.shape[0]:
-            cu = np.repeat(np.arange(c, dtype=np.int32),
-                           np.diff(ix.core_ptr))
-            c_src = (cu + ix.n_noncore).astype(np.int32)
-            c_dst = (ix.core_dst + ix.n_noncore).astype(np.int32)
-            chunk = ix.chunk
-            padn = (-c_src.shape[0]) % chunk
-            pad_i = np.full(padn, ix.n, np.int32)
-            self._c_edges = (
-                jnp.asarray(np.concatenate([c_src, pad_i]).reshape(-1, chunk)),
-                jnp.asarray(np.concatenate([c_dst, pad_i]).reshape(-1, chunk)),
-                jnp.asarray(np.concatenate(
-                    [ix.core_w,
-                     np.full(padn, np.inf, np.float32)]).reshape(-1, chunk)),
-                jnp.asarray(np.concatenate(
-                    [ix.core_assoc,
-                     np.full(padn, -1, np.int32)]).reshape(-1, chunk)))
-        else:
-            z_i = jnp.zeros((0, ix.chunk), jnp.int32)
-            z_f = jnp.zeros((0, ix.chunk), jnp.float32)
-            self._c_edges = (z_i, z_i, z_f, z_i)
+        self._perm = jnp.asarray(index.perm)
+        self._closure = jnp.asarray(index.core_closure)
+        # Dense core adjacency is only materialized for the mode that
+        # scans it; closure/dijkstra engines skip the [C, C] build.
+        self._core_adj = (jnp.asarray(_dense_core_adjacency(index))
+                          if core_mode == "bellman" else None)
 
         self._ssd_jit = jax.jit(functools.partial(
             self._ssd_impl, core_mode=core_mode), static_argnames=())
         self._sssp_jit = jax.jit(functools.partial(
             self._sssp_impl, core_mode=core_mode))
 
-    # ------------------------------------------------------------------ SSD
-    def _sweep_bucketed(self, dist: jnp.ndarray, buckets) -> jnp.ndarray:
-        """Level-by-level fused relaxation via the Pallas kernel.
+    # ------------------------------------------------------- plan executor
+    def _run_plan(self, state: jnp.ndarray, plan, level_body) -> jnp.ndarray:
+        """THE sweep executor: one ``lax.scan`` over static plan levels.
+
+        ``level_body(state, dst, src_idx, w, assoc, valid) -> state``
+        consumes one ``[M_pad(, K_fix)]`` level slice; ``valid`` is the
+        row-validity mask with the level mask already folded in, so
+        padding rows and padding levels are inert regardless of the body.
+        The scan body traces once — O(1) traces per sweep, not O(levels).
+        """
+        dst, src_idx, w, assoc, row_valid, level_mask = plan
+        if dst.shape[0] == 0:
+            return state
+
+        def body(carry, lvl):
+            l_dst, l_src, l_w, l_assoc, l_valid, l_mask = lvl
+            return level_body(carry, l_dst, l_src, l_w, l_assoc,
+                              l_valid & l_mask), None
+
+        state, _ = jax.lax.scan(
+            body, state, (dst, src_idx, w, assoc, row_valid, level_mask))
+        return state
+
+    def _relax_level(self, dist, dst, src_idx, w, assoc, valid):
+        """Distance relaxation for one level (SSD sweeps, DESIGN.md §5).
 
         Within one level the gathered sources and the scattered
-        destinations are disjoint (DESIGN.md §3), so gather-then-scatter is
-        race-free; rows that split one destination's long in-edge list are
-        merged by the scatter-min.
+        destinations are disjoint (DESIGN.md §3), so gather-then-scatter
+        is race-free; rows that split one destination's long in-edge list
+        are merged by the scatter-min, and sentinel rows scatter into the
+        scrap column (which stays +inf forever).
         """
-        for (dsts, src_idx, w) in buckets:
-            cur = dist[:, dsts]
-            new = relax_bucketed(dist, src_idx, w, cur, use_pallas=True,
-                                 interpret=self.interpret)
-            dist = dist.at[:, dsts].min(new)
-        return dist
+        del assoc
+        cur = dist[:, dst]
+        new = relax_bucketed(dist, src_idx, w, cur, row_valid=valid,
+                             use_pallas=self.use_pallas,
+                             interpret=self.interpret)
+        return dist.at[:, dst].min(new)
 
+    def _recon_level_body(self, dist):
+        """SSSP predecessor reconstruction as a plan level body (§6):
+        scatter the assoc of every tight edge, max-merged (-1 = none)."""
+        eps = self.eps
+
+        def body(pred, dst, src_idx, w, assoc, valid):
+            cand = dist[:, src_idx] + w[None]            # [S, M, K]
+            tgt = dist[:, dst]                           # [S, M]
+            tight = jnp.isfinite(cand) \
+                & (cand <= (tgt + eps * (1.0 + tgt))[..., None])
+            tight &= valid[None, :, None]
+            pcand = jnp.max(jnp.where(tight, assoc[None], -1), axis=-1)
+            return pred.at[:, dst].max(pcand)
+
+        return body
+
+    # ------------------------------------------------------------------ SSD
     def _core_update(self, dist: jnp.ndarray, core_mode: str) -> jnp.ndarray:
         ix = self.index
         c = ix.n_core
@@ -248,16 +245,12 @@ class QueryEngine:
         # rules bind "batch", the [S, n_pad] state shards over devices and
         # every sweep below runs data-parallel (no-op without a mesh).
         dist = sl.shard(dist, "batch", None)
-        if self.use_pallas:                            # forward search  (§5.1)
-            dist = self._sweep_bucketed(dist, self._f_bkt)
-        else:
-            dist = _sweep(dist, *self._f)
+        dist = self._run_plan(dist, self._plan_f,       # forward search (§5.1)
+                              self._relax_level)
         if core_mode != "dijkstra":
-            dist = self._core_update(dist, core_mode)  # core search     (§5.2)
-        if self.use_pallas:                            # backward search (§5.3)
-            dist = self._sweep_bucketed(dist, self._b_bkt)
-        else:
-            dist = _sweep(dist, *self._b)
+            dist = self._core_update(dist, core_mode)   # core search    (§5.2)
+        dist = self._run_plan(dist, self._plan_b,       # backward search(§5.3)
+                              self._relax_level)
         return dist
 
     def _sssp_impl(self, sources_perm: jnp.ndarray, core_mode: str):
@@ -265,10 +258,9 @@ class QueryEngine:
         dist = self._ssd_impl(sources_perm, core_mode)
         s = sources_perm.shape[0]
         pred = jnp.full((s, ix.n_pad), -1, jnp.int32)
-        pred = _recon_sweep(dist, pred, *self._f, self._f_assoc, self.eps)
-        pred = _recon_sweep(dist, pred, *self._c_edges[:3],
-                            self._c_edges[3], self.eps)
-        pred = _recon_sweep(dist, pred, *self._b, self._b_assoc, self.eps)
+        recon = self._recon_level_body(dist)
+        for plan in (self._plan_f, self._plan_c, self._plan_b):
+            pred = self._run_plan(pred, plan, recon)
         return dist, pred
 
     # ---------------------------------------------------------------- public
@@ -287,7 +279,18 @@ class QueryEngine:
         for sources/unreachable. Node ids in original order."""
         sources = np.asarray(sources, dtype=np.int32)
         src_perm = jnp.asarray(self.index.perm[sources])
-        dist, pred = self._sssp_jit(src_perm)
+        if self.core_mode == "dijkstra":
+            # The host-Dijkstra core search lives outside the jit'd
+            # pipeline; run it first, then reconstruction over the same
+            # plans (eagerly — this mode is for validation, not serving).
+            dist = jnp.asarray(self._dijkstra_path(np.asarray(src_perm)))
+            pred = jnp.full((dist.shape[0], self.index.n_pad), -1,
+                            jnp.int32)
+            recon = self._recon_level_body(dist)
+            for plan in (self._plan_f, self._plan_c, self._plan_b):
+                pred = self._run_plan(pred, plan, recon)
+        else:
+            dist, pred = self._sssp_jit(src_perm)
         dist = np.asarray(dist)[:, self.index.perm]
         pred = np.asarray(pred)[:, self.index.perm]
         return dist, pred
@@ -310,13 +313,15 @@ class QueryEngine:
 
     # ----------------------------------------------- paper-faithful Dijkstra
     def _dijkstra_path(self, sources_perm: np.ndarray) -> np.ndarray:
-        """Forward sweep (JAX) -> host heap Dijkstra on G_c -> backward
-        sweep (JAX): the literal §5 pipeline, used as a validation mode."""
+        """Forward plan sweep (JAX) -> host heap Dijkstra on G_c ->
+        backward plan sweep (JAX): the literal §5 pipeline, used as a
+        validation mode."""
         ix = self.index
         s = sources_perm.shape[0]
         dist = jnp.full((s, ix.n_pad), INF, jnp.float32)
         dist = dist.at[jnp.arange(s), jnp.asarray(sources_perm)].set(0.0)
-        dist = np.array(_sweep(dist, *self._f))  # writable host copy
+        dist = np.array(self._run_plan(dist, self._plan_f,
+                                       self._relax_level))  # writable copy
 
         lo, c = ix.n_noncore, ix.n_core
         for i in range(s):
@@ -337,7 +342,8 @@ class QueryEngine:
                         dc[v] = nd
                         heapq.heappush(heap, (nd, int(v)))
             dist[i, lo:lo + c] = dc
-        return np.asarray(_sweep(jnp.asarray(dist), *self._b))
+        return np.asarray(self._run_plan(jnp.asarray(dist), self._plan_b,
+                                         self._relax_level))
 
 
 def dijkstra_reference(g, sources) -> np.ndarray:

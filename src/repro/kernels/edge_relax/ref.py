@@ -1,12 +1,23 @@
 """Pure-jnp oracle for the bucketed edge relaxation."""
+from typing import Optional
+
 import jax.numpy as jnp
 
 
 def relax_bucketed_ref(gathered: jnp.ndarray, w: jnp.ndarray,
-                       cur: jnp.ndarray) -> jnp.ndarray:
+                       cur: jnp.ndarray,
+                       row_valid: Optional[jnp.ndarray] = None
+                       ) -> jnp.ndarray:
     """out[s, m] = min(cur[s, m], min_k gathered[s, m, k] + w[m, k]).
+
+    ``row_valid`` ([M] bool) keeps ``cur`` untouched on padding rows —
+    redundant with the +inf padding weights (absorbing under (min, +))
+    but kept explicit so masked plan rows cost nothing semantic.
 
     Materializes the [S, M, K] sum — exactly the HBM traffic the Pallas
     kernel avoids.
     """
-    return jnp.minimum(cur, jnp.min(gathered + w[None], axis=-1))
+    new = jnp.minimum(cur, jnp.min(gathered + w[None], axis=-1))
+    if row_valid is None:
+        return new
+    return jnp.where(row_valid[None, :], new, cur)

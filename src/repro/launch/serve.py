@@ -70,7 +70,8 @@ class QueryServer:
 
     def __init__(self, engine: QueryEngine, batch_size: int = 32,
                  max_wait_ms: float = 2.0, cache_entries: int = 1024,
-                 sssp: bool = False, device: Optional[BlockDevice] = None):
+                 sssp: bool = False, device: Optional[BlockDevice] = None,
+                 warm_start: bool = False):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.engine = engine
@@ -86,17 +87,24 @@ class QueryServer:
         self._timer: Optional[asyncio.Task] = None
 
         ix = engine.index
-        # One query's disk cost = one sequential scan of the index files
+        # One query's disk cost = one sequential scan of the index "files"
         # (paper §5: traversal order == file order); a batch shares it.
+        # The executor scans the persisted SweepPlans, so those are the
+        # bytes charged (assoc slots only when SSSP reconstruction runs).
         # The core search reads the dense closure OR the raw CSR, never
         # both — charge whichever this engine's core_mode actually scans.
         core_bytes = (ix.core_closure.nbytes if engine.core_mode == "closure"
                       else ix.core_ptr.nbytes + ix.core_dst.nbytes
                       + ix.core_w.nbytes)
         self._sweep_bytes = (
-            ix.f_src.nbytes + ix.f_dst.nbytes + ix.f_w.nbytes
-            + ix.b_src.nbytes + ix.b_dst.nbytes + ix.b_w.nbytes
+            ix.plan_f.scan_bytes(include_assoc=self.sssp)
+            + ix.plan_b.scan_bytes(include_assoc=self.sssp)
+            + (ix.plan_core.scan_bytes(True) if self.sssp else 0)
             + core_bytes)
+        if warm_start:
+            # Compile the batch shape at construction (server startup),
+            # off the first request's latency path.
+            self.warmup()
 
     # ------------------------------------------------------------- internals
     def _cache_get(self, source: int):

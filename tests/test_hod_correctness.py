@@ -238,6 +238,110 @@ def test_sssp_unreachable_targets():
         assert paths[1] is None
 
 
+def _plan_engines(ix, **kw):
+    return [QueryEngine(ix, use_pallas=False, **kw),
+            QueryEngine(ix, use_pallas=True, **kw)]
+
+
+def test_plan_executor_single_node_graph():
+    """n=1, no edges: one level, empty core, all-padding plans."""
+    from repro.core import from_edges
+    g = from_edges(1, np.array([], dtype=int), np.array([], dtype=int),
+                   np.array([], dtype=float))
+    res = build_hod(g, BuildConfig(max_core_nodes=4, max_core_edges=64))
+    ix = pack_index(g, res, chunk=16)
+    for eng in _plan_engines(ix):
+        d = eng.ssd(np.array([0], dtype=np.int32))
+        assert d[0, 0] == 0.0
+        dist, pred = eng.sssp(np.array([0], dtype=np.int32))
+        assert dist[0, 0] == 0.0 and pred[0, 0] == -1
+
+
+def test_plan_executor_all_core_graph():
+    """max_rounds=0 removes nothing: empty f/b plans, core-only search,
+    SSSP reconstruction rides the core plan alone."""
+    from repro.core import from_edges
+    g = from_edges(5, np.array([0, 1, 2, 3]), np.array([1, 2, 3, 4]),
+                   np.array([1.0, 2.0, 1.0, 3.0]))
+    res = build_hod(g, BuildConfig(max_core_nodes=16, max_core_edges=256,
+                                   max_rounds=0))
+    ix = pack_index(g, res, chunk=16)
+    assert ix.n_levels == 0 and ix.n_core == g.n
+    assert ix.plan_f.l_pad == 0 and ix.plan_b.l_pad == 0
+    oracle = dijkstra_reference(g, [0])
+    for eng in _plan_engines(ix):
+        d = eng.ssd(np.array([0], dtype=np.int32))[:, :g.n]
+        np.testing.assert_allclose(d, oracle, rtol=1e-6)
+        assert eng.paths(np.array([0]), np.array([4]))[0] == [0, 1, 2, 3, 4]
+
+
+def test_plan_executor_empty_level_graph():
+    """Isolated nodes form a level that contributes no backward edges:
+    the plan must mask it and queries must still match the oracle."""
+    from repro.core import from_edges
+    g = from_edges(8, np.array([0, 1]), np.array([1, 2]),
+                   np.array([1.0, 1.0]))
+    res = build_hod(g, BuildConfig(max_core_nodes=2, max_core_edges=64))
+    ix = pack_index(g, res, chunk=16)
+    sources = np.array([0, 5], dtype=np.int32)
+    oracle = dijkstra_reference(g, sources)
+    finite = np.isfinite(oracle)
+    for eng in _plan_engines(ix):
+        d = eng.ssd(sources)[:, :g.n]
+        np.testing.assert_allclose(d[finite], oracle[finite], rtol=1e-6)
+        assert np.all(np.isinf(d[~finite]))
+        dist, pred = eng.sssp(sources)
+        assert np.all(pred[1, :g.n] == -1)   # isolated source: no preds
+        assert eng.paths(np.array([0]), np.array([2]))[0] == [0, 1, 2]
+
+
+def test_sssp_dijkstra_core_mode():
+    """Regression: sssp() under core_mode="dijkstra" must route through
+    the host-Dijkstra core search before reconstruction — the jit'd
+    pipeline skips the core phase for this mode, which used to yield
+    inf distances and empty predecessors."""
+    from repro.core import from_edges
+    # all-core chain: the whole query IS the core search
+    g = from_edges(5, np.array([0, 1, 2, 3]), np.array([1, 2, 3, 4]),
+                   np.array([1.0, 2.0, 1.0, 3.0]))
+    res = build_hod(g, BuildConfig(max_core_nodes=16, max_core_edges=256,
+                                   max_rounds=0))
+    eng = QueryEngine(pack_index(g, res, chunk=16), core_mode="dijkstra")
+    dist, pred = eng.sssp(np.array([0], dtype=np.int32))
+    np.testing.assert_allclose(dist[0, :g.n], [0.0, 1.0, 3.0, 4.0, 7.0])
+    assert eng.paths(np.array([0]), np.array([4]))[0] == [0, 1, 2, 3, 4]
+    # and on a generic graph it matches the default-mode reconstruction
+    g2 = gnm_random_digraph(120, 500, seed=31, weighted=True)
+    res2 = build_hod(g2, CFG)
+    ix2 = pack_index(g2, res2, chunk=64)
+    src = np.array([0, 60], dtype=np.int32)
+    d_ref, p_ref = QueryEngine(ix2).sssp(src)
+    d_dij, p_dij = QueryEngine(ix2, core_mode="dijkstra").sssp(src)
+    np.testing.assert_allclose(d_dij, d_ref, rtol=1e-5)
+    np.testing.assert_array_equal(p_dij, p_ref)
+
+
+def test_save_load_query_equivalence_pallas_sssp(tmp_path):
+    """Persisted plans answer bit-identical SSD/SSSP through both
+    executor kernels after a save→load round trip."""
+    from repro.core.index import HoDIndex
+    g = gnm_random_digraph(140, 560, seed=23, weighted=True)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    path = str(tmp_path / "ix.npz")
+    ix.save(path)
+    ix2 = HoDIndex.load(path)
+    src = np.array([2, 70, 139], dtype=np.int32)
+    for use_pallas in (False, True):
+        e1 = QueryEngine(ix, use_pallas=use_pallas)
+        e2 = QueryEngine(ix2, use_pallas=use_pallas)
+        np.testing.assert_array_equal(e1.ssd(src), e2.ssd(src))
+        d1, p1 = e1.sssp(src)
+        d2, p2 = e2.sssp(src)
+        np.testing.assert_array_equal(d1, d2)
+        np.testing.assert_array_equal(p1, p2)
+
+
 def test_closeness_estimation_runs():
     from repro.core import estimate_closeness
     g = grid_road_graph(10, seed=1)

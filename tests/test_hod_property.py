@@ -46,6 +46,66 @@ def test_property_hod_matches_dijkstra(data):
     assert np.all(np.isinf(d[~finite]))
 
 
+@settings(max_examples=15, deadline=None)
+@given(random_graphs(), st.booleans())
+def test_property_plan_executor_ssd_sssp_matches_dijkstra(data, use_pallas):
+    """The SweepPlan executor (both kernels) answers SSD exactly like the
+    Dijkstra oracle, and its SSSP predecessors unfold into length-correct
+    paths — on arbitrary random digraphs, which include isolated nodes
+    (empty sweep levels) and unreachable targets."""
+    n, src, dst, w, seed = data
+    g = from_edges(n, src, dst, w)
+    cfg = BuildConfig(max_core_nodes=8, max_core_edges=256, seed=seed % 7)
+    res = build_hod(g, cfg)
+    from repro.core import pack_index
+    ix = pack_index(g, res, chunk=32)
+    sources = np.array([0, n - 1], dtype=np.int32)
+    oracle = dijkstra_reference(g, sources)
+    eng = QueryEngine(ix, use_pallas=use_pallas)
+    d = eng.ssd(sources)[:, :n]
+    finite = np.isfinite(oracle)
+    assert np.allclose(d[finite], oracle[finite], rtol=1e-5)
+    assert np.all(np.isinf(d[~finite]))
+
+    dist, pred = eng.sssp(sources)
+    adj = {}
+    for a, b, ww in zip(src.tolist(), dst.tolist(), w.tolist()):
+        adj[(a, b)] = min(adj.get((a, b), np.inf), ww)
+    for i, s in enumerate(sources.tolist()):
+        for t in range(n):
+            if not np.isfinite(oracle[i, t]) or t == s:
+                assert t == s or pred[i, t] == -1
+                continue
+            cur, total, hops = t, 0.0, 0
+            while cur != s:
+                p = int(pred[i, cur])
+                assert p >= 0 and (p, cur) in adj, (s, t, cur)
+                total += adj[(p, cur)]
+                cur = p
+                hops += 1
+                assert hops <= n
+            assert np.isclose(total, oracle[i, t], rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(random_graphs())
+def test_property_save_load_query_equivalence(tmp_path_factory, data):
+    """save → load → query answers bit-identically to the in-memory
+    index (the persisted plan IS the executed layout)."""
+    n, src, dst, w, seed = data
+    g = from_edges(n, src, dst, w)
+    res = build_hod(g, BuildConfig(max_core_nodes=8, max_core_edges=256))
+    from repro.core import pack_index
+    from repro.core.index import HoDIndex
+    ix = pack_index(g, res, chunk=32)
+    path = str(tmp_path_factory.mktemp("fmt") / "ix.npz")
+    ix.save(path)
+    ix2 = HoDIndex.load(path)
+    sources = np.array([0, n // 2], dtype=np.int32)
+    np.testing.assert_array_equal(QueryEngine(ix).ssd(sources),
+                                  QueryEngine(ix2).ssd(sources))
+
+
 @settings(max_examples=10, deadline=None)
 @given(random_graphs())
 def test_property_shortcut_lengths_never_shorter(data):

@@ -1,0 +1,102 @@
+"""Index ``.npz`` format versioning + SweepPlan serialization.
+
+v2 files persist the static-shape sweep plans (DESIGN.md §5); v1 files
+(chunk arrays only) must still load — rebuilding the plans on the fly
+with a warning — and answer identical queries.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BuildConfig, QueryEngine, build_hod,
+                        gnm_random_digraph, pack_index)
+from repro.core.index import FORMAT_VERSION, HoDIndex
+
+CFG = BuildConfig(max_core_nodes=32, max_core_edges=1024, seed=0)
+
+
+@pytest.fixture(scope="module")
+def packed():
+    g = gnm_random_digraph(130, 520, seed=8, weighted=True)
+    res = build_hod(g, CFG)
+    return g, pack_index(g, res, chunk=64)
+
+
+def _as_legacy_v1(path: str, legacy_path: str) -> None:
+    """Strip every v2-only key, forging the pre-plan file layout."""
+    z = np.load(path)
+    v1 = {k: z[k] for k in z.files
+          if k not in ("format_version", "k_cap")
+          and not k.startswith(("pf_", "pb_", "pc_"))}
+    np.savez_compressed(legacy_path, **v1)
+
+
+def test_saved_file_is_stamped_v2(packed, tmp_path):
+    _, ix = packed
+    path = str(tmp_path / "ix.npz")
+    ix.save(path)
+    z = np.load(path)
+    assert int(z["format_version"]) == FORMAT_VERSION == 2
+    for pre in ("pf", "pb", "pc"):
+        for part in ("dst", "src", "w", "assoc", "valid", "mask"):
+            assert f"{pre}_{part}" in z.files
+
+
+def test_roundtrip_preserves_plans_bitexact(packed, tmp_path):
+    _, ix = packed
+    path = str(tmp_path / "ix.npz")
+    ix.save(path)
+    ix2 = HoDIndex.load(path)
+    assert ix2.format_version == 2 and ix2.k_cap == ix.k_cap
+    for field in ("plan_f", "plan_b", "plan_core"):
+        a, b = getattr(ix, field), getattr(ix2, field)
+        np.testing.assert_array_equal(a.dst, b.dst)
+        np.testing.assert_array_equal(a.src_idx, b.src_idx)
+        np.testing.assert_array_equal(a.w, b.w)
+        np.testing.assert_array_equal(a.assoc, b.assoc)
+        np.testing.assert_array_equal(a.row_valid, b.row_valid)
+        np.testing.assert_array_equal(a.level_mask, b.level_mask)
+
+
+def test_legacy_v1_file_loads_with_warning_and_rebuilds(packed, tmp_path):
+    _, ix = packed
+    path = str(tmp_path / "ix.npz")
+    legacy = str(tmp_path / "ix_v1.npz")
+    ix.save(path)
+    _as_legacy_v1(path, legacy)
+
+    with pytest.warns(UserWarning, match="old-format"):
+        ix_old = HoDIndex.load(legacy)
+    assert ix_old.format_version == 1
+    # the on-the-fly rebuild reproduces the packed plans exactly
+    for field in ("plan_f", "plan_b", "plan_core"):
+        a, b = getattr(ix, field), getattr(ix_old, field)
+        np.testing.assert_array_equal(a.dst, b.dst)
+        np.testing.assert_array_equal(a.src_idx, b.src_idx)
+        np.testing.assert_array_equal(a.w, b.w)
+        np.testing.assert_array_equal(a.assoc, b.assoc)
+
+    # and a v2 load raises no warning at all
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        HoDIndex.load(path)
+
+
+def test_legacy_and_v2_answer_identical_queries(packed, tmp_path):
+    g, ix = packed
+    path = str(tmp_path / "ix.npz")
+    legacy = str(tmp_path / "ix_v1.npz")
+    ix.save(path)
+    _as_legacy_v1(path, legacy)
+    with pytest.warns(UserWarning):
+        ix_old = HoDIndex.load(legacy)
+    ix_new = HoDIndex.load(path)
+    src = np.array([0, 40, 129], dtype=np.int32)
+    for use_pallas in (False, True):
+        d_old = QueryEngine(ix_old, use_pallas=use_pallas).ssd(src)
+        d_new = QueryEngine(ix_new, use_pallas=use_pallas).ssd(src)
+        np.testing.assert_array_equal(d_old, d_new)
+    s_old = QueryEngine(ix_old).sssp(src)
+    s_new = QueryEngine(ix_new).sssp(src)
+    np.testing.assert_array_equal(s_old[0], s_new[0])
+    np.testing.assert_array_equal(s_old[1], s_new[1])

@@ -41,6 +41,26 @@ def test_edge_relax(s, n, m, k):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 
+@pytest.mark.parametrize("s,n,m,k", [(4, 100, 37, 5), (3, 64, 200, 2)])
+def test_edge_relax_row_validity_mask(s, n, m, k):
+    """Masked (padding) rows of a scanned plan level pass ``cur`` through
+    untouched, in both the Pallas kernel and the jnp oracle."""
+    from repro.kernels.edge_relax.ops import relax_bucketed
+    dist = jnp.asarray(RNG.uniform(0, 10, (s, n)), jnp.float32)
+    src = jnp.asarray(RNG.integers(0, n, (m, k)), jnp.int32)
+    w = jnp.asarray(RNG.uniform(0, 3, (m, k)), jnp.float32)
+    cur = jnp.asarray(RNG.uniform(0, 20, (s, m)), jnp.float32)
+    # row 0 is masked AND would win (zero weights): the mask must suppress it
+    w = w.at[0].set(0.0)
+    valid = jnp.asarray(RNG.random(m) < 0.6).at[0].set(False)
+    a = relax_bucketed(dist, src, w, cur, row_valid=valid, use_pallas=True)
+    b = relax_bucketed(dist, src, w, cur, row_valid=valid, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    inval = ~np.asarray(valid)
+    np.testing.assert_array_equal(np.asarray(a)[:, inval],
+                                  np.asarray(cur)[:, inval])
+
+
 # ------------------------------------------------------------ embedding_bag
 @pytest.mark.parametrize("v,d,b,k", [
     (10, 8, 3, 2), (50, 24, 9, 6), (100, 128, 32, 4), (7, 64, 17, 1),

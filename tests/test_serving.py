@@ -166,6 +166,47 @@ def test_sharded_batch_axis_matches_unsharded(engine):
     np.testing.assert_array_equal(plain, sharded)
 
 
+def test_compile_count_independent_of_levels():
+    """Regression guard for the SweepPlan executor's O(1) trace claim:
+    a use_pallas=True SSD query traces the bucketed relax once per sweep
+    direction — NOT once per level — so the trace count must not change
+    between graphs with different level counts, and a repeat query with
+    the same batch shape must compile nothing at all."""
+    from repro.core import build_hod, grid_road_graph, pack_index
+    from repro.kernels.edge_relax import ops
+
+    counts, levels = [], []
+    for side in (7, 14):
+        g = grid_road_graph(side, seed=0)
+        res = build_hod(g, CFG)
+        ix = pack_index(g, res, chunk=64)
+        eng = QueryEngine(ix, use_pallas=True)
+        ops.relax_bucketed.clear_cache()   # isolate this engine's traces
+        before = ops.TRACE_COUNT
+        eng.ssd(np.arange(4, dtype=np.int32))
+        counts.append(ops.TRACE_COUNT - before)
+        levels.append(ix.n_levels)
+        before = ops.TRACE_COUNT           # steady state: no retrace
+        eng.ssd(np.arange(4, dtype=np.int32) + 1)
+        assert ops.TRACE_COUNT == before
+        assert eng._ssd_jit._cache_size() == 1
+    assert levels[0] != levels[1], "graphs must differ in level count"
+    # at most one relax trace per sweep direction (forward/backward plans
+    # with identical [M_pad, K_fix] envelopes dedupe to a single trace);
+    # the pre-plan executor traced once per LEVEL (~n_levels_f+n_levels_b)
+    assert all(1 <= c <= 2 for c in counts), (counts, levels)
+    assert all(c < lv for c, lv in zip(counts, levels))
+
+
+def test_warm_start_compiles_at_construction(engine):
+    server = QueryServer(engine, batch_size=4, warm_start=True)
+    assert server.stats.batches == 0      # warmup stats were reset
+    results = server.serve_stream(np.array([1, 2, 3, 4], dtype=np.int32))
+    assert len(results) == 4 and server.stats.batches == 1
+    np.testing.assert_array_equal(
+        results[0].dist, engine.ssd(np.array([1], dtype=np.int32))[0])
+
+
 def test_server_results_match_oracle(engine):
     g = engine._graph
     sources = np.array([2, 40, 77], dtype=np.int32)
