@@ -1,15 +1,49 @@
 """Benchmark entrypoint: one module per paper table + the roofline report.
 
+Tables that return metric rows are also persisted machine-readably so
+the perf trajectory is trackable across PRs:
+
+* ``BENCH_serve.json`` — serving throughput, store cache sweep, cold
+  start (``--tables serve``);
+* ``BENCH_query.json`` — per-dataset query times (``--tables 4``).
+
+Schema: ``{"git_sha": ..., "generated_unix": ..., "tables":
+{name: [row-dict, ...]}}``.
+
     PYTHONPATH=src python -m benchmarks.run [--tables 2,3,4,5,6,hod,serve,roof]
 """
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def _write_bench(path: str, tables: dict) -> None:
+    doc = {"git_sha": _git_sha(), "generated_unix": int(time.time()),
+           "tables": tables}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables", default="2,3,4,5,6,hod,serve,roof")
+    ap.add_argument("--bench-dir", default=".",
+                    help="where BENCH_*.json files are written")
     args = ap.parse_args()
     want = set(args.tables.split(","))
     t0 = time.time()
@@ -22,7 +56,9 @@ def main() -> int:
         table3_index_size.run()
     if "4" in want:
         from . import table4_query_time
-        table4_query_time.run()
+        rows = table4_query_time.run()
+        _write_bench(os.path.join(args.bench_dir, "BENCH_query.json"),
+                     {"query_time": rows})
     if "5" in want:
         from . import table5_closeness
         table5_closeness.run()
@@ -34,7 +70,9 @@ def main() -> int:
         hod_scaling.run()
     if "serve" in want:
         from . import serve_throughput
-        serve_throughput.run()
+        tables = serve_throughput.run()
+        _write_bench(os.path.join(args.bench_dir, "BENCH_serve.json"),
+                     tables)
     if "roof" in want:
         from . import roofline
         roofline.run()

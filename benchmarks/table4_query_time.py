@@ -49,5 +49,8 @@ def run(n_queries: int = 16):
             f"{vc_t*1e3:.0f}/{vc_io*1e3:.0f}", bfs,
             f"{dij_t*1e3:.0f}/{io_d.modeled_seconds()*1e3:.0f}",
             f"{vc_t/max(hod_t,1e-9):.0f}x"]))
-        rows.append((name, hod_t, vc_t, dij_t))
+        rows.append({"dataset": name, "hod_s": hod_t,
+                     "hod_modeled_io_s": hod_io, "vc_s": vc_t,
+                     "vc_modeled_io_s": vc_io, "em_dijkstra_s": dij_t,
+                     "em_dijkstra_modeled_io_s": io_d.modeled_seconds()})
     return rows

@@ -38,13 +38,37 @@ from .graph import Digraph
 
 __all__ = ["HoDIndex", "LevelBuckets", "SweepPlan", "build_sweep_plan",
            "build_core_plan", "level_buckets", "pack_index",
-           "floyd_warshall_closure", "FORMAT_VERSION"]
+           "floyd_warshall_closure", "FORMAT_VERSION",
+           "scan_cost_bytes", "core_scan_bytes"]
 
 INF = np.float32(np.inf)
 
-#: ``.npz`` index layout version.  v1 = chunk arrays only (plans re-derived
-#: at load time); v2 = chunk arrays + serialized SweepPlans.
-FORMAT_VERSION = 2
+
+def scan_cost_bytes(rows: int, edges: int, include_assoc: bool = False,
+                    id_itemsize: int = 4, w_itemsize: int = 4) -> int:
+    """Compact-payload cost of one sequential sweep over a plan: one dst
+    id per real row plus (src, w[, assoc]) per real edge.  THE scan cost
+    model — shared by :meth:`SweepPlan.scan_bytes` (from live arrays)
+    and ``repro.storage.IndexStore.scan_bytes`` (from persisted
+    counts), so the accounting cannot drift between them."""
+    per_edge = id_itemsize + w_itemsize \
+        + (id_itemsize if include_assoc else 0)
+    return rows * id_itemsize + edges * per_edge
+
+
+def core_scan_bytes(ix: "HoDIndex", core_mode: str) -> int:
+    """Bytes one core search reads: the dense closure for
+    ``core_mode="closure"``, the raw CSR otherwise — never both."""
+    if core_mode == "closure":
+        return int(ix.core_closure.nbytes)
+    return int(ix.core_ptr.nbytes + ix.core_dst.nbytes + ix.core_w.nbytes)
+
+#: Index layout version.  v1 = chunk arrays only (plans re-derived at
+#: load time); v2 = chunk arrays + serialized SweepPlans; v3 = the
+#: store generation: same ``.npz`` keys, plus the disk-resident block
+#: store (`repro.storage`, :meth:`HoDIndex.save_store`) as the serving
+#: format.  v1/v2 ``.npz`` files keep loading.
+FORMAT_VERSION = 3
 
 
 @dataclasses.dataclass
@@ -90,11 +114,12 @@ class SweepPlan:
         padding envelope is a compile-time artifact, not file content,
         so it is not charged (charging it would inflate the paper-
         comparable I/O numbers ~10x on level-skewed graphs)."""
-        rows = int(self.row_valid.sum())
-        edges = int(np.isfinite(self.w).sum())
-        per_edge = self.src_idx.itemsize + self.w.itemsize \
-            + (self.assoc.itemsize if include_assoc else 0)
-        return rows * self.dst.itemsize + edges * per_edge
+        return scan_cost_bytes(
+            rows=int(self.row_valid.sum()),
+            edges=int(np.isfinite(self.w).sum()),
+            include_assoc=include_assoc,
+            id_itemsize=self.src_idx.itemsize,
+            w_itemsize=self.w.itemsize)
 
     def nbytes(self) -> int:
         """In-memory (padded) footprint of the plan arrays."""
@@ -311,13 +336,44 @@ class HoDIndex:
     # -- serialization ------------------------------------------------------
     _PLAN_PREFIXES = (("plan_f", "pf"), ("plan_b", "pb"),
                       ("plan_core", "pc"))
+    #: the non-plan array roster — the single source of truth shared by
+    #: ``save``/``load`` and the block store (`repro.storage.blockfile`),
+    #: so a new index array cannot be silently dropped from one path.
+    _ARRAY_FIELDS = ("perm", "inv_perm", "level_ptr", "rank",
+                     "f_src", "f_dst", "f_w", "f_assoc",
+                     "b_src", "b_dst", "b_w", "b_assoc",
+                     "core_closure", "core_ptr", "core_dst", "core_w",
+                     "core_assoc")
 
-    def save(self, path: str) -> None:
-        """Write the v2 ``.npz`` layout: chunk arrays + sweep plans."""
-        self.ensure_plans()
-        meta = np.array([self.n, self.n_pad, self.n_noncore, self.n_core,
+    def resident_arrays(self) -> Dict[str, np.ndarray]:
+        """name -> array for every non-plan field (the store's
+        always-in-memory tier)."""
+        return {k: getattr(self, k) for k in self._ARRAY_FIELDS}
+
+    def _meta_array(self) -> np.ndarray:
+        return np.array([self.n, self.n_pad, self.n_noncore, self.n_core,
                          self.n_levels, self.chunk, self.core_diameter],
                         dtype=np.int64)
+
+    @classmethod
+    def _from_npz(cls, z) -> "HoDIndex":
+        """Construct the plan-less index from an open ``.npz`` mapping
+        (shared by :meth:`load` and ``repro.storage.IndexStore``)."""
+        meta = z["meta"]
+        version = int(z["format_version"]) if "format_version" in z else 1
+        return cls(
+            n=int(meta[0]), n_pad=int(meta[1]), n_noncore=int(meta[2]),
+            n_core=int(meta[3]), n_levels=int(meta[4]), chunk=int(meta[5]),
+            core_diameter=int(meta[6]),
+            **{k: z[k] for k in cls._ARRAY_FIELDS},
+            format_version=version,
+            k_cap=int(z["k_cap"]) if "k_cap" in z else 16)
+
+    def save(self, path: str) -> None:
+        """Write the monolithic ``.npz`` layout: chunk arrays + sweep
+        plans (one blob, fully resident on load).  For the disk-resident
+        serving format see :meth:`save_store`."""
+        self.ensure_plans()
         plans = {}
         for field, pre in self._PLAN_PREFIXES:
             p: SweepPlan = getattr(self, field)
@@ -328,47 +384,55 @@ class HoDIndex:
             plans[f"{pre}_valid"] = p.row_valid
             plans[f"{pre}_mask"] = p.level_mask
         np.savez_compressed(
-            path, meta=meta,
+            path, meta=self._meta_array(),
             format_version=np.int64(FORMAT_VERSION),
             k_cap=np.int64(self.k_cap),
-            perm=self.perm, inv_perm=self.inv_perm,
-            level_ptr=self.level_ptr, rank=self.rank,
-            f_src=self.f_src, f_dst=self.f_dst, f_w=self.f_w,
-            f_assoc=self.f_assoc, b_src=self.b_src, b_dst=self.b_dst,
-            b_w=self.b_w, b_assoc=self.b_assoc,
-            core_closure=self.core_closure, core_ptr=self.core_ptr,
-            core_dst=self.core_dst, core_w=self.core_w,
-            core_assoc=self.core_assoc, **plans)
+            **self.resident_arrays(), **plans)
+
+    def save_store(self, path: str, block_bytes: int = 65536) -> None:
+        """Write the disk-resident v3 block store (a directory): the
+        small resident tier plus one block segment file per sweep plan,
+        readable level-by-level without loading the whole index — see
+        `repro.storage.blockfile` and DESIGN.md §6."""
+        from ..storage.blockfile import save_store
+        save_store(self, path, block_bytes=block_bytes)
 
     @staticmethod
-    def load(path: str) -> "HoDIndex":
-        z = np.load(path)
-        meta = z["meta"]
-        version = int(z["format_version"]) if "format_version" in z else 1
-        ix = HoDIndex(
-            n=int(meta[0]), n_pad=int(meta[1]), n_noncore=int(meta[2]),
-            n_core=int(meta[3]), n_levels=int(meta[4]), chunk=int(meta[5]),
-            core_diameter=int(meta[6]), perm=z["perm"],
-            inv_perm=z["inv_perm"], level_ptr=z["level_ptr"], rank=z["rank"],
-            f_src=z["f_src"], f_dst=z["f_dst"], f_w=z["f_w"],
-            f_assoc=z["f_assoc"], b_src=z["b_src"], b_dst=z["b_dst"],
-            b_w=z["b_w"], b_assoc=z["b_assoc"],
-            core_closure=z["core_closure"], core_ptr=z["core_ptr"],
-            core_dst=z["core_dst"], core_w=z["core_w"],
-            core_assoc=z["core_assoc"], format_version=version,
-            k_cap=int(z["k_cap"]) if "k_cap" in z else 16)
-        if version >= 2:
-            for field, pre in HoDIndex._PLAN_PREFIXES:
-                setattr(ix, field, SweepPlan(
-                    dst=z[f"{pre}_dst"], src_idx=z[f"{pre}_src"],
-                    w=z[f"{pre}_w"], assoc=z[f"{pre}_assoc"],
-                    row_valid=z[f"{pre}_valid"],
-                    level_mask=z[f"{pre}_mask"]))
-        else:
+    def load_store(path: str) -> "HoDIndex":
+        """Fully materialize a v3 store directory (plans bit-exact).
+        Serving should stream via ``repro.storage.IndexStore`` instead."""
+        from ..storage.blockfile import load_store
+        return load_store(path)
+
+    @staticmethod
+    def load(path: str, mmap_mode: Optional[str] = None) -> "HoDIndex":
+        """Load a ``.npz`` index (any format version), or a v3 store
+        directory.
+
+        The ``NpzFile`` is closed deterministically (context manager) —
+        every array is materialized before return.  ``mmap_mode`` is
+        passed through to :func:`numpy.load`; note numpy can only
+        memory-map uncompressed member arrays, so for the default
+        compressed archives it is a no-op.
+        """
+        import os
+        if os.path.isdir(path):
+            return HoDIndex.load_store(path)
+        with np.load(path, mmap_mode=mmap_mode) as z:
+            ix = HoDIndex._from_npz(z)
+            has_plans = f"{HoDIndex._PLAN_PREFIXES[0][1]}_dst" in z
+            if has_plans:
+                for field, pre in HoDIndex._PLAN_PREFIXES:
+                    setattr(ix, field, SweepPlan(
+                        dst=z[f"{pre}_dst"], src_idx=z[f"{pre}_src"],
+                        w=z[f"{pre}_w"], assoc=z[f"{pre}_assoc"],
+                        row_valid=z[f"{pre}_valid"],
+                        level_mask=z[f"{pre}_mask"]))
+        if not has_plans:
             warnings.warn(
-                f"{path}: old-format (v{version}) HoD index without sweep "
-                "plans — rebuilding the SweepPlan layout on the fly; "
-                "re-save the index to persist it.", stacklevel=2)
+                f"{path}: old-format (v{ix.format_version}) HoD index "
+                "without sweep plans — rebuilding the SweepPlan layout on "
+                "the fly; re-save the index to persist it.", stacklevel=2)
             ix.ensure_plans()
         return ix
 

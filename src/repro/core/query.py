@@ -120,6 +120,26 @@ class QueryEngine:
     def __init__(self, index: HoDIndex, core_mode: str = "closure",
                  use_pallas: bool = False, eps: float = 0.0,
                  interpret: Optional[bool] = None, k_cap: int = 16):
+        self._init_engine(index, core_mode, use_pallas, eps, interpret)
+
+        index.ensure_plans(k_cap)   # no-op for pack_index/v2+-load indexes
+        self._plan_f = _plan_to_device(index.plan_f)
+        self._plan_b = _plan_to_device(index.plan_b)
+        self._plan_c = _plan_to_device(index.plan_core)
+
+        self._ssd_jit = jax.jit(functools.partial(
+            self._ssd_impl, core_mode=self.core_mode), static_argnames=())
+        self._sssp_jit = jax.jit(functools.partial(
+            self._sssp_impl, core_mode=self.core_mode))
+
+    def _init_engine(self, index: HoDIndex, core_mode: str,
+                     use_pallas: bool, eps: float,
+                     interpret: Optional[bool]) -> None:
+        """Plan-independent engine state: everything a sweep level body
+        or core search needs that is NOT a device-resident SweepPlan.
+        Shared with the store-backed streaming engine
+        (`repro.storage.stream`), which feeds plan levels from the page
+        cache instead of uploading them whole."""
         if core_mode not in ("closure", "bellman", "dijkstra"):
             raise ValueError(core_mode)
         if core_mode == "closure" and index.n_core \
@@ -132,22 +152,12 @@ class QueryEngine:
                           if interpret is None else interpret)
         self.eps = float(eps)
 
-        index.ensure_plans(k_cap)   # no-op for pack_index/v2-load indexes
-        self._plan_f = _plan_to_device(index.plan_f)
-        self._plan_b = _plan_to_device(index.plan_b)
-        self._plan_c = _plan_to_device(index.plan_core)
-
         self._perm = jnp.asarray(index.perm)
         self._closure = jnp.asarray(index.core_closure)
         # Dense core adjacency is only materialized for the mode that
         # scans it; closure/dijkstra engines skip the [C, C] build.
         self._core_adj = (jnp.asarray(_dense_core_adjacency(index))
                           if core_mode == "bellman" else None)
-
-        self._ssd_jit = jax.jit(functools.partial(
-            self._ssd_impl, core_mode=core_mode), static_argnames=())
-        self._sssp_jit = jax.jit(functools.partial(
-            self._sssp_impl, core_mode=core_mode))
 
     # ------------------------------------------------------- plan executor
     def _run_plan(self, state: jnp.ndarray, plan, level_body) -> jnp.ndarray:
@@ -172,6 +182,24 @@ class QueryEngine:
             body, state, (dst, src_idx, w, assoc, row_valid, level_mask))
         return state
 
+    def _run_plan_stream(self, state: jnp.ndarray, levels,
+                         step) -> jnp.ndarray:
+        """Level-granular donate/feed twin of :meth:`_run_plan`.
+
+        ``levels`` yields host-side ``(dst, src_idx, w, assoc, valid)``
+        slabs — typically straight off the store's page cache
+        (DESIGN.md §6) — and ``step`` is a jitted level function with
+        ``state`` donated, so peak plan memory is one level slab, not
+        the whole ``[L_pad, M_pad, K_fix]`` envelope.  Every slab of one
+        plan shares a shape, so ``step`` traces once per plan — the
+        same O(1)-trace property as the ``lax.scan`` executor.
+        """
+        for (dst, src_idx, w, assoc, valid) in levels:
+            state = step(state, jnp.asarray(dst), jnp.asarray(src_idx),
+                         jnp.asarray(w), jnp.asarray(assoc),
+                         jnp.asarray(valid))
+        return state
+
     def _relax_level(self, dist, dst, src_idx, w, assoc, valid):
         """Distance relaxation for one level (SSD sweeps, DESIGN.md §5).
 
@@ -188,19 +216,25 @@ class QueryEngine:
                              interpret=self.interpret)
         return dist.at[:, dst].min(new)
 
-    def _recon_level_body(self, dist):
-        """SSSP predecessor reconstruction as a plan level body (§6):
-        scatter the assoc of every tight edge, max-merged (-1 = none)."""
-        eps = self.eps
+    def _recon_level(self, pred, dist, dst, src_idx, w, assoc, valid):
+        """SSSP predecessor reconstruction for one level (§6): scatter
+        the assoc of every tight edge, max-merged (-1 = none).  ``dist``
+        is an explicit operand (not a closure) so the streaming engine
+        can jit this once and feed per-query distances."""
+        cand = dist[:, src_idx] + w[None]            # [S, M, K]
+        tgt = dist[:, dst]                           # [S, M]
+        tight = jnp.isfinite(cand) \
+            & (cand <= (tgt + self.eps * (1.0 + tgt))[..., None])
+        tight &= valid[None, :, None]
+        pcand = jnp.max(jnp.where(tight, assoc[None], -1), axis=-1)
+        return pred.at[:, dst].max(pcand)
 
+    def _recon_level_body(self, dist):
+        """:meth:`_recon_level` curried into the plan-executor body
+        signature (``dist`` closed over, for the all-on-device path)."""
         def body(pred, dst, src_idx, w, assoc, valid):
-            cand = dist[:, src_idx] + w[None]            # [S, M, K]
-            tgt = dist[:, dst]                           # [S, M]
-            tight = jnp.isfinite(cand) \
-                & (cand <= (tgt + eps * (1.0 + tgt))[..., None])
-            tight &= valid[None, :, None]
-            pcand = jnp.max(jnp.where(tight, assoc[None], -1), axis=-1)
-            return pred.at[:, dst].max(pcand)
+            return self._recon_level(pred, dist, dst, src_idx, w, assoc,
+                                     valid)
 
         return body
 
@@ -312,19 +346,14 @@ class QueryEngine:
         return out
 
     # ----------------------------------------------- paper-faithful Dijkstra
-    def _dijkstra_path(self, sources_perm: np.ndarray) -> np.ndarray:
-        """Forward plan sweep (JAX) -> host heap Dijkstra on G_c ->
-        backward plan sweep (JAX): the literal §5 pipeline, used as a
-        validation mode."""
+    def _core_dijkstra_host(self, dist: np.ndarray) -> np.ndarray:
+        """Host heap Dijkstra on the core CSR for every batch row — the
+        literal §5.2 in-memory core search.  Mutates and returns the
+        writable ``[S, n_pad]`` host array; shared by the in-memory
+        validation mode and the store-backed streaming engine."""
         ix = self.index
-        s = sources_perm.shape[0]
-        dist = jnp.full((s, ix.n_pad), INF, jnp.float32)
-        dist = dist.at[jnp.arange(s), jnp.asarray(sources_perm)].set(0.0)
-        dist = np.array(self._run_plan(dist, self._plan_f,
-                                       self._relax_level))  # writable copy
-
         lo, c = ix.n_noncore, ix.n_core
-        for i in range(s):
+        for i in range(dist.shape[0]):
             dc = dist[i, lo:lo + c].copy()
             heap = [(float(d), int(v)) for v, d in enumerate(dc)
                     if np.isfinite(d)]
@@ -342,6 +371,19 @@ class QueryEngine:
                         dc[v] = nd
                         heapq.heappush(heap, (nd, int(v)))
             dist[i, lo:lo + c] = dc
+        return dist
+
+    def _dijkstra_path(self, sources_perm: np.ndarray) -> np.ndarray:
+        """Forward plan sweep (JAX) -> host heap Dijkstra on G_c ->
+        backward plan sweep (JAX): the literal §5 pipeline, used as a
+        validation mode."""
+        ix = self.index
+        s = sources_perm.shape[0]
+        dist = jnp.full((s, ix.n_pad), INF, jnp.float32)
+        dist = dist.at[jnp.arange(s), jnp.asarray(sources_perm)].set(0.0)
+        dist = np.array(self._run_plan(dist, self._plan_f,
+                                       self._relax_level))  # writable copy
+        dist = self._core_dijkstra_host(dist)
         return np.asarray(self._run_plan(jnp.asarray(dist), self._plan_b,
                                          self._relax_level))
 

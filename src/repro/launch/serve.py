@@ -1,5 +1,6 @@
-"""Batched HoD query serving (DESIGN.md §6): async request coalescing,
-fixed jit batch shapes, an LRU source-row cache, and modeled disk cost.
+"""Batched HoD query serving (DESIGN.md §7): async request coalescing,
+fixed jit batch shapes, an LRU source-row cache, and disk cost — modeled
+for in-memory engines, *measured* for store-backed ones.
 
 The paper's flagship workload (closeness centrality, Table 5) issues
 hundreds of SSD queries; the ROADMAP north-star is the same shape at
@@ -7,13 +8,22 @@ traffic scale — many independent clients, each asking for one source.
 :class:`QueryServer` sits between the two: it accepts an async request
 stream, coalesces sources into fixed-size batches (padding to the jit'd
 batch shape so no request triggers a recompile), answers repeats from an
-LRU cache of recent source rows, and meters the index scan each batch
-would cost on disk through the block-I/O model (DESIGN.md §7) — one scan
-of F_f + core + F_b *per batch*, which is exactly the amortization HoD's
-sweep structure buys (every source in the batch shares the scan).
+LRU cache of recent source rows, and accounts each batch's index scan
+through the block-I/O model (DESIGN.md §8) — one scan of F_f + core +
+F_b *per batch*, which is exactly the amortization HoD's sweep
+structure buys (every source in the batch shares the scan).
+
+Two index residency modes (DESIGN.md §6):
+
+* ``QueryServer(engine)`` — the classic fully-resident engine; each
+  batch charges one *synthetic* sequential scan to the device;
+* ``QueryServer(store_path=..., cache_bytes=...)`` — disk-resident: the
+  index streams from its block store through a bounded page cache, the
+  device meters *actual* block reads (cache misses), and per-batch
+  real-vs-modeled I/O plus the cache hit-rate land in ``batch_io``.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 32
-    PYTHONPATH=src python -m repro.launch.serve --rate 500 --use-pallas
+    PYTHONPATH=src python -m repro.launch.serve --store --cache-frac 0.05
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ from ..core import (BuildConfig, QueryEngine, grid_road_graph, pack_index,
 from ..core.build_fast import build_hod_fast
 from ..core.io_sim import BlockDevice, IOStats
 
-__all__ = ["QueryResult", "ServerStats", "QueryServer"]
+__all__ = ["QueryResult", "ServerStats", "BatchIO", "QueryServer"]
 
 
 @dataclasses.dataclass
@@ -51,12 +61,31 @@ class QueryResult:
 class ServerStats:
     requests: int = 0
     batches: int = 0
-    cache_hits: int = 0
+    cache_hits: int = 0                 # result-row LRU hits
     padded_slots: int = 0               # jit-shape filler rows executed
     busy_seconds: float = 0.0           # time inside the engine
+    page_hits: int = 0                  # store page-cache block hits
+    page_misses: int = 0                # store page-cache block misses
+    store_bytes_read: int = 0           # actual bytes read from segments
 
     def throughput(self) -> float:
         return self.requests / self.busy_seconds if self.busy_seconds else 0.0
+
+    def page_hit_rate(self) -> float:
+        total = self.page_hits + self.page_misses
+        return self.page_hits / total if total else 0.0
+
+
+@dataclasses.dataclass
+class BatchIO:
+    """Real-vs-modeled I/O of one executed batch (store-backed servers).
+    ``page_hits / (page_hits + page_misses)`` is the batch's hit rate."""
+
+    batch: int                          # stats.batches ordinal
+    real_bytes: int                     # actual segment bytes read (misses)
+    modeled_bytes: int                  # compact-payload scan model
+    page_hits: int = 0
+    page_misses: int = 0
 
 
 class QueryServer:
@@ -68,39 +97,71 @@ class QueryServer:
     for co-riders before a partial batch is flushed anyway.
     """
 
-    def __init__(self, engine: QueryEngine, batch_size: int = 32,
+    def __init__(self, engine: Optional[QueryEngine] = None,
+                 batch_size: int = 32,
                  max_wait_ms: float = 2.0, cache_entries: int = 1024,
                  sssp: bool = False, device: Optional[BlockDevice] = None,
-                 warm_start: bool = False):
+                 warm_start: bool = False,
+                 store_path: Optional[str] = None,
+                 cache_bytes: Optional[int] = None,
+                 cache_policy: str = "lru",
+                 engine_opts: Optional[dict] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if engine is None:
+            if store_path is None:
+                raise ValueError("pass an engine or a store_path")
+            # Store-backed serving (DESIGN.md §6): stream the index from
+            # its block store under a bounded page-cache budget; the
+            # device then meters *actual* block reads (cache misses),
+            # so no synthetic scan charge is applied per batch.
+            from ..storage import (IndexStore, PageCache,
+                                   StreamingQueryEngine)
+            cache = PageCache(cache_bytes, policy=cache_policy)
+            store = IndexStore(store_path, device=device, cache=cache)
+            device = store.device
+            try:
+                engine = StreamingQueryEngine(store, **(engine_opts or {}))
+            except Exception:
+                store.close()   # don't leak the opened segments
+                raise
+        elif store_path is not None:
+            raise ValueError("pass either an engine or a store_path, "
+                             "not both")
         self.engine = engine
+        self.store = getattr(engine, "store", None)   # None = in-memory
         self.batch_size = int(batch_size)
         self.max_wait_ms = float(max_wait_ms)
         self.cache_entries = int(cache_entries)
         self.sssp = bool(sssp)
         self.device = device or BlockDevice()
         self.stats = ServerStats()
+        self.batch_io: List[BatchIO] = []
         self._cache: "collections.OrderedDict[Tuple[bool, int], tuple]" = \
             collections.OrderedDict()
         self._pending: List[Tuple[int, asyncio.Future, float]] = []
         self._timer: Optional[asyncio.Task] = None
+        self._last_batch_bytes = 0.0    # real (store) or modeled (in-mem)
 
-        ix = engine.index
         # One query's disk cost = one sequential scan of the index "files"
         # (paper §5: traversal order == file order); a batch shares it.
         # The executor scans the persisted SweepPlans, so those are the
         # bytes charged (assoc slots only when SSSP reconstruction runs).
         # The core search reads the dense closure OR the raw CSR, never
         # both — charge whichever this engine's core_mode actually scans.
-        core_bytes = (ix.core_closure.nbytes if engine.core_mode == "closure"
-                      else ix.core_ptr.nbytes + ix.core_dst.nbytes
-                      + ix.core_w.nbytes)
-        self._sweep_bytes = (
-            ix.plan_f.scan_bytes(include_assoc=self.sssp)
-            + ix.plan_b.scan_bytes(include_assoc=self.sssp)
-            + (ix.plan_core.scan_bytes(True) if self.sssp else 0)
-            + core_bytes)
+        # Store-backed servers keep this as the *model* to compare real
+        # reads against; only in-memory engines charge it to the device.
+        if self.store is not None:
+            self._sweep_bytes = self.store.scan_bytes(
+                sssp=self.sssp, core_mode=engine.core_mode)
+        else:
+            from ..core.index import core_scan_bytes
+            ix = engine.index
+            self._sweep_bytes = (
+                ix.plan_f.scan_bytes(include_assoc=self.sssp)
+                + ix.plan_b.scan_bytes(include_assoc=self.sssp)
+                + (ix.plan_core.scan_bytes(True) if self.sssp else 0)
+                + core_scan_bytes(ix, engine.core_mode))
         if warm_start:
             # Compile the batch shape at construction (server startup),
             # off the first request's latency path.
@@ -129,6 +190,8 @@ class QueryServer:
         batch = sources
         if fill < self.batch_size:     # pad to the compiled shape
             batch = np.pad(sources, (0, self.batch_size - fill), mode="edge")
+        before = (self.store.cache.stats.snapshot()
+                  if self.store is not None else None)
         t0 = time.perf_counter()
         if self.sssp:
             dist, pred = self.engine.sssp(batch)
@@ -137,7 +200,23 @@ class QueryServer:
         self.stats.busy_seconds += time.perf_counter() - t0
         self.stats.batches += 1
         self.stats.padded_slots += self.batch_size - fill
-        self.device.sequential(self._sweep_bytes)
+        if self.store is None:
+            # In-memory engine: no real reads happen, charge the modeled
+            # sequential scan so I/O reporting stays meaningful.
+            self.device.sequential(self._sweep_bytes)
+            self._last_batch_bytes = float(self._sweep_bytes)
+        else:
+            # Store-backed: the page cache already metered every actual
+            # block read (miss) through the device — record the delta.
+            delta = self.store.cache.stats - before
+            self.stats.page_hits += delta.hits
+            self.stats.page_misses += delta.misses
+            self.stats.store_bytes_read += delta.bytes_read
+            self.batch_io.append(BatchIO(
+                batch=self.stats.batches, real_bytes=delta.bytes_read,
+                modeled_bytes=self._sweep_bytes, page_hits=delta.hits,
+                page_misses=delta.misses))
+            self._last_batch_bytes = float(delta.bytes_read)
         rows = []
         for i, s in enumerate(sources.tolist()):
             row = (dist[i].copy(), None if pred is None else pred[i].copy())
@@ -150,8 +229,13 @@ class QueryServer:
         """Trigger the one-and-only jit compile outside the latency path."""
         self._execute(np.zeros(1, dtype=np.int32))
         self.stats = ServerStats()
+        self.batch_io.clear()
         self.device.reset()
         self._cache.clear()   # the warmup row must not count as a hit
+        if self.store is not None:
+            # Zero the page-cache counters too; warmed *blocks* stay
+            # resident (that is what a real warm start buys).
+            self.store.cache.reset_stats()
 
     def serve_stream(self, sources: np.ndarray) -> List[QueryResult]:
         """Closed-loop driver: answer a request list in arrival order.
@@ -174,7 +258,7 @@ class QueryServer:
                 for s, row in zip(misses, self._execute(uniq)):
                     miss_rows[s] = row
             lat = time.perf_counter() - t0
-            share = self._sweep_bytes / len(misses) if misses else 0.0
+            share = self._last_batch_bytes / len(misses) if misses else 0.0
             charged = set()   # charge each missed source's share once
             for s in chunk.tolist():
                 cached = s not in miss_rows
@@ -233,7 +317,7 @@ class QueryServer:
                     if not fut.done():
                         fut.set_exception(exc)
                 continue
-            share = self._sweep_bytes / len(take)
+            share = self._last_batch_bytes / len(take)
             now = time.perf_counter()
             for (s, fut, t0), row in zip(take, rows):
                 self.stats.requests += 1
@@ -250,8 +334,21 @@ class QueryServer:
         self._flush()
 
     # ------------------------------------------------------------- reporting
+    @property
+    def modeled_scan_bytes(self) -> int:
+        """Compact-payload cost of one full index scan (the model a
+        store-backed server's real reads are compared against)."""
+        return self._sweep_bytes
+
     def modeled_io(self) -> IOStats:
+        """Device-metered I/O: actual block reads for store-backed
+        servers, the synthetic per-batch scan charge otherwise."""
         return self.device.stats
+
+    def close(self) -> None:
+        """Release store file handles / prefetch thread (store-backed)."""
+        if self.store is not None:
+            self.engine.close()
 
 
 # --------------------------------------------------------------------- CLI
@@ -282,6 +379,12 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--data-parallel", action="store_true",
                     help="shard batches over all local devices (shardlib)")
+    ap.add_argument("--store", action="store_true",
+                    help="serve disk-resident: save_store the index and "
+                         "stream it through a bounded page cache")
+    ap.add_argument("--cache-frac", type=float, default=0.25,
+                    help="page-cache budget as a fraction of the store "
+                         "segment bytes (with --store)")
     args = ap.parse_args()
 
     g = (grid_road_graph(args.side) if args.graph == "road"
@@ -294,10 +397,24 @@ def main() -> None:
     print(f"index built in {time.perf_counter()-t0:.1f}s "
           f"({ix.n_levels} levels, core {ix.n_core}, "
           f"{res.stats.shortcuts_added} shortcuts)")
-    eng = QueryEngine(ix, use_pallas=args.use_pallas)
-    server = QueryServer(eng, batch_size=args.batch, sssp=args.sssp,
-                         cache_entries=args.cache,
-                         max_wait_ms=args.max_wait_ms)
+    if args.store:
+        import tempfile
+        store_dir = tempfile.mkdtemp(prefix="hod_store_")
+        ix.save_store(store_dir)
+        from ..storage import segment_bytes
+        budget = int(args.cache_frac * segment_bytes(store_dir))
+        print(f"store: {store_dir} (page cache {budget} bytes, "
+              f"{args.cache_frac:.0%} of segments)")
+        server = QueryServer(store_path=store_dir, cache_bytes=budget,
+                             batch_size=args.batch, sssp=args.sssp,
+                             cache_entries=args.cache,
+                             max_wait_ms=args.max_wait_ms,
+                             engine_opts={"use_pallas": args.use_pallas})
+    else:
+        eng = QueryEngine(ix, use_pallas=args.use_pallas)
+        server = QueryServer(eng, batch_size=args.batch, sssp=args.sssp,
+                             cache_entries=args.cache,
+                             max_wait_ms=args.max_wait_ms)
 
     rng = np.random.default_rng(0)
     sources = rng.integers(0, g.n, args.requests).astype(np.int32)
@@ -308,31 +425,50 @@ def main() -> None:
             return asyncio.run(_open_loop(server, sources, args.rate))
         return server.serve_stream(sources)
 
-    if args.data_parallel:
-        import jax
+    try:
+        if args.data_parallel:
+            import jax
 
-        from .. import shardlib as sl
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-        with sl.axis_rules(mesh, {"batch": "data"}):
+            from .. import shardlib as sl
+            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+            with sl.axis_rules(mesh, {"batch": "data"}):
+                results = drive()
+            print(f"data-parallel over {len(jax.devices())} device(s)")
+        else:
             results = drive()
-        print(f"data-parallel over {len(jax.devices())} device(s)")
-    else:
-        results = drive()
 
-    lat = np.array([r.latency_s for r in results]) * 1e3
-    st = server.stats
-    io = server.modeled_io()
-    print(f"served {st.requests} {'SSSP' if args.sssp else 'SSD'} requests "
-          f"in {st.batches} batches (batch={args.batch}, "
-          f"{st.cache_hits} cache hits, {st.padded_slots} padded slots)")
-    print(f"latency: mean {lat.mean():.2f} ms  "
-          f"p50 {np.percentile(lat, 50):.2f}  "
-          f"p95 {np.percentile(lat, 95):.2f}  "
-          f"p99 {np.percentile(lat, 99):.2f} ms")
-    print(f"throughput: {st.throughput():.0f} queries/s (engine-busy basis)")
-    print(f"modeled disk: {io.seq_blocks} seq blocks, "
-          f"{io.modeled_seconds()*1e3:.1f} ms total, "
-          f"{io.modeled_seconds()/max(st.requests,1)*1e3:.2f} ms/query")
+        lat = np.array([r.latency_s for r in results]) * 1e3
+        st = server.stats
+        io = server.modeled_io()
+        print(f"served {st.requests} {'SSSP' if args.sssp else 'SSD'} "
+              f"requests in {st.batches} batches (batch={args.batch}, "
+              f"{st.cache_hits} cache hits, {st.padded_slots} padded slots)")
+        print(f"latency: mean {lat.mean():.2f} ms  "
+              f"p50 {np.percentile(lat, 50):.2f}  "
+              f"p95 {np.percentile(lat, 95):.2f}  "
+              f"p99 {np.percentile(lat, 99):.2f} ms")
+        print(f"throughput: {st.throughput():.0f} queries/s "
+              "(engine-busy basis)")
+        kind = "measured" if server.store is not None else "modeled"
+        io_s = io.modeled_seconds(block_bytes=server.device.block_bytes)
+        print(f"{kind} disk: {io.seq_blocks} seq + {io.rand_blocks} rand "
+              f"blocks, {io_s*1e3:.1f} ms total, "
+              f"{io_s/max(st.requests,1)*1e3:.2f} ms/query")
+        if server.store is not None:
+            real = st.store_bytes_read
+            modeled = server.modeled_scan_bytes * st.batches
+            print(f"page cache: hit rate {st.page_hit_rate():.1%} "
+                  f"({st.page_hits} hits / {st.page_misses} misses), "
+                  f"real {real/1e6:.2f} MB vs modeled {modeled/1e6:.2f} MB "
+                  f"across {st.batches} batches")
+    finally:
+        # The --store index is a throwaway in /tmp: always release the
+        # segment fds / prefetch thread and remove it, even on Ctrl-C.
+        if server.store is not None:
+            import shutil
+            store_dir = server.store.path
+            server.close()
+            shutil.rmtree(store_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

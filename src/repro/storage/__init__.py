@@ -1,0 +1,9 @@
+# Disk-resident index store (DESIGN.md §6): block segment files per
+# SweepPlan, a bounded-byte page cache metered through the block-I/O
+# device, and a streaming executor that runs queries with peak plan
+# memory O(largest level) instead of O(index).
+from .blockfile import (DEFAULT_BLOCK_BYTES, IndexStore,  # noqa: F401
+                        SEGMENT_NAMES, SegmentReader, load_store,
+                        open_store, save_store, segment_bytes)
+from .pagecache import CacheStats, PageCache  # noqa: F401
+from .stream import StreamingQueryEngine  # noqa: F401

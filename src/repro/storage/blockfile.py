@@ -1,0 +1,342 @@
+"""Disk-resident HoD index store: block segment files (DESIGN.md §6).
+
+A *store* is a directory holding the index in two tiers:
+
+* ``resident.npz`` — the small, always-in-memory tier: permutations,
+  level pointers, core closure/CSR, and the legacy chunk arrays.  This
+  is exactly the v1 ``.npz`` content (plus store metadata), so the
+  memory a store-backed engine must hold is independent of the sweep
+  plans' padded envelope;
+* ``plan_f.seg`` / ``plan_b.seg`` / ``plan_core.seg`` — one *segment
+  file* per :class:`~repro.core.index.SweepPlan`, the tier queries
+  stream.  Each segment is a sequence of fixed-size blocks::
+
+      block 0        header: magic, format version (3), block_bytes,
+                     n_real/l_pad/m_pad/k_fix/sentinel, footer extent
+      blocks 1..     one *slab* per real level, in scan order, each
+                     block-aligned and ``blocks_per_level`` long
+      footer         JSON per-level extent table [start_block,
+                     n_blocks, payload_bytes] (self-description /
+                     integrity check — slab geometry is also derivable
+                     from the header alone)
+
+  A level slab packs the level's plan slice contiguously —
+  ``dst[int32 M] · row_valid[u8 M] · src_idx[int32 M·K] · w[f32 M·K] ·
+  assoc[int32 M·K]`` — so a level read is ``blocks_per_level``
+  *consecutive* blocks: a full sweep is one sequential scan per segment
+  (the paper's §4.5 invariant, now at actual-file granularity), and a
+  partially-warm cache turns the misses into random reads.  Only real
+  levels are stored; the plan's padding levels (``level_mask`` False)
+  are reconstructed from header defaults, bit-exactly.
+
+Every block read goes through a :class:`~repro.storage.pagecache
+.PageCache` and — on a miss — is metered through the store's
+:class:`~repro.core.io_sim.BlockDevice` with a *global* block id
+(segments get disjoint id ranges), so ``IOStats`` classifies the actual
+read pattern: consecutive-block level scans count sequential, skips
+introduced by cache hits count random.  Open-time header/footer reads
+are not charged; only query-time block fetches are.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.index import (FORMAT_VERSION, HoDIndex, SweepPlan,
+                          core_scan_bytes, scan_cost_bytes)
+from ..core.io_sim import BlockDevice
+from .pagecache import PageCache
+
+__all__ = ["IndexStore", "SegmentReader", "save_store", "open_store",
+           "load_store", "segment_bytes", "SEGMENT_NAMES",
+           "DEFAULT_BLOCK_BYTES"]
+
+MAGIC = b"HODSEG03"
+_HEADER = struct.Struct("<8sIIIIIIIIQQ")   # magic, version, block_bytes,
+# n_real, l_pad, m_pad, k_fix, sentinel, reserved, footer_off, footer_len
+RESIDENT_FILE = "resident.npz"
+SEGMENT_NAMES = ("plan_f", "plan_b", "plan_core")
+#: paper §2 block size (64 KiB) — the modeled device's unit.
+DEFAULT_BLOCK_BYTES = 65536
+#: disjoint global-block-id ranges per segment, so the device's
+#: seq/random cursor sees a cross-segment switch as one seek.
+_SEGMENT_ID_STRIDE = 1 << 40
+
+INF = np.float32(np.inf)
+
+
+def _level_payload_bytes(m_pad: int, k_fix: int) -> int:
+    return m_pad * (4 + 1) + m_pad * k_fix * (4 + 4 + 4)
+
+
+# --------------------------------------------------------------------- write
+def _write_segment(path: str, plan: SweepPlan, sentinel: int,
+                   block_bytes: int) -> None:
+    if block_bytes < _HEADER.size:
+        raise ValueError(f"block_bytes must be >= {_HEADER.size}")
+    n_real = plan.n_real_levels
+    m_pad, k_fix = plan.m_pad, plan.k_fix
+    payload = _level_payload_bytes(m_pad, k_fix)
+    bpl = max(1, -(-payload // block_bytes))
+    footer = json.dumps({
+        "extents": [[1 + l * bpl, bpl, payload] for l in range(n_real)],
+        "n_real": n_real,
+    }).encode()
+    footer_off = block_bytes * (1 + n_real * bpl)
+    header = _HEADER.pack(MAGIC, FORMAT_VERSION, block_bytes, n_real,
+                          plan.l_pad, m_pad, k_fix, sentinel, 0,
+                          footer_off, len(footer))
+    with open(path, "wb") as f:
+        f.write(header.ljust(block_bytes, b"\0"))
+        for lvl in range(n_real):
+            slab = b"".join((
+                np.ascontiguousarray(plan.dst[lvl], np.int32).tobytes(),
+                np.ascontiguousarray(plan.row_valid[lvl],
+                                     np.uint8).tobytes(),
+                np.ascontiguousarray(plan.src_idx[lvl], np.int32).tobytes(),
+                np.ascontiguousarray(plan.w[lvl], np.float32).tobytes(),
+                np.ascontiguousarray(plan.assoc[lvl], np.int32).tobytes()))
+            assert len(slab) == payload
+            f.write(slab.ljust(bpl * block_bytes, b"\0"))
+        f.write(footer)
+
+
+def save_store(ix: HoDIndex, path: str,
+               block_bytes: int = DEFAULT_BLOCK_BYTES) -> None:
+    """Write ``ix`` as a disk-resident store directory at ``path``.
+
+    The resident tier reuses the ``.npz`` machinery (minus the plan
+    arrays); each sweep plan becomes one block segment file.  Per-plan
+    compact-payload counts (real rows/edges) ride in the resident file
+    so a store-backed server can model the paper-comparable scan cost
+    without materializing any plan.
+    """
+    ix.ensure_plans()
+    os.makedirs(path, exist_ok=True)
+    plan_stats = {}
+    for name in SEGMENT_NAMES:
+        p: SweepPlan = getattr(ix, name)
+        plan_stats[f"{name}_rows"] = np.int64(p.row_valid.sum())
+        plan_stats[f"{name}_edges"] = np.int64(np.isfinite(p.w).sum())
+    np.savez_compressed(
+        os.path.join(path, RESIDENT_FILE), meta=ix._meta_array(),
+        format_version=np.int64(FORMAT_VERSION),
+        store=np.bool_(True), block_bytes=np.int64(block_bytes),
+        k_cap=np.int64(ix.k_cap),
+        **ix.resident_arrays(), **plan_stats)
+    for name in SEGMENT_NAMES:
+        _write_segment(os.path.join(path, f"{name}.seg"),
+                       getattr(ix, name), ix.n, block_bytes)
+
+
+# ---------------------------------------------------------------------- read
+class SegmentReader:
+    """One open segment file: header-described slab geometry + cached,
+    device-metered block reads (thread-safe via ``os.pread``)."""
+
+    def __init__(self, path: str, base_block: int, device: BlockDevice,
+                 cache: PageCache, name: str):
+        self.path, self.name = path, name
+        self.device, self.cache = device, cache
+        self.base_block = base_block
+        # Cache keys are namespaced by the segment's absolute path: a
+        # PageCache shared between stores (one global memory budget)
+        # must never serve one store's blocks to another.
+        self._cache_ns = os.path.abspath(path)
+        self._fd = os.open(path, os.O_RDONLY)
+        try:
+            raw = os.pread(self._fd, _HEADER.size, 0)
+            (magic, version, self.block_bytes, self.n_real, self.l_pad,
+             self.m_pad, self.k_fix, self.sentinel, _res,
+             footer_off, footer_len) = _HEADER.unpack(raw)
+            if magic != MAGIC:
+                raise ValueError(f"{path}: not a HoD segment file "
+                                 f"(magic {magic!r})")
+            if version > FORMAT_VERSION:
+                raise ValueError(f"{path}: segment format v{version} is "
+                                 f"newer than this reader "
+                                 f"(v{FORMAT_VERSION})")
+            self.payload_bytes = _level_payload_bytes(self.m_pad,
+                                                      self.k_fix)
+            self.blocks_per_level = max(1, -(-self.payload_bytes
+                                             // self.block_bytes))
+            footer = json.loads(os.pread(self._fd, footer_len, footer_off))
+            if footer["n_real"] != self.n_real:
+                raise ValueError(
+                    f"{path}: footer/header level count mismatch")
+            self.extents = footer["extents"]
+        except Exception:
+            self.close()
+            raise
+
+    def close(self) -> None:
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    # ------------------------------------------------------------- block I/O
+    def _load_block(self, block: int) -> bytes:
+        data = os.pread(self._fd, self.block_bytes,
+                        block * self.block_bytes)
+        self.device.access_block(self.base_block + block, len(data))
+        return data
+
+    def read_level(self, lvl: int) -> Tuple[np.ndarray, np.ndarray,
+                                            np.ndarray, np.ndarray,
+                                            np.ndarray]:
+        """One real level's ``(dst, src_idx, w, assoc, row_valid)`` slab,
+        fetched block-by-block through the page cache."""
+        if not 0 <= lvl < self.n_real:
+            raise IndexError(f"{self.name}: level {lvl} out of range "
+                             f"(0..{self.n_real - 1})")
+        start, n_blocks, payload = self.extents[lvl]
+        parts = [self.cache.get((self._cache_ns, b),
+                                lambda b=b: self._load_block(b))
+                 for b in range(start, start + n_blocks)]
+        buf = b"".join(parts)[:payload]
+        m, k = self.m_pad, self.k_fix
+        off = 0
+        dst = np.frombuffer(buf, np.int32, m, off); off += 4 * m
+        valid = np.frombuffer(buf, np.uint8, m, off).astype(bool); off += m
+        src = np.frombuffer(buf, np.int32, m * k, off).reshape(m, k)
+        off += 4 * m * k
+        w = np.frombuffer(buf, np.float32, m * k, off).reshape(m, k)
+        off += 4 * m * k
+        assoc = np.frombuffer(buf, np.int32, m * k, off).reshape(m, k)
+        return dst, src, w, assoc, valid
+
+    def read_plan(self) -> SweepPlan:
+        """Materialize the full plan (padding levels reconstructed from
+        header defaults) — the non-streaming ``load_store`` path."""
+        l_pad, m, k = self.l_pad, self.m_pad, self.k_fix
+        if l_pad == 0:
+            from ..core.index import _empty_plan
+            return _empty_plan(k)
+        dst = np.full((l_pad, m), self.sentinel, np.int32)
+        src = np.full((l_pad, m, k), self.sentinel, np.int32)
+        w = np.full((l_pad, m, k), INF, np.float32)
+        assoc = np.full((l_pad, m, k), -1, np.int32)
+        row_valid = np.zeros((l_pad, m), bool)
+        level_mask = np.zeros((l_pad,), bool)
+        for lvl in range(self.n_real):
+            d, s, w_l, a, v = self.read_level(lvl)
+            dst[lvl], src[lvl], w[lvl], assoc[lvl] = d, s, w_l, a
+            row_valid[lvl] = v
+            level_mask[lvl] = True
+        return SweepPlan(dst=dst, src_idx=src, w=w, assoc=assoc,
+                         row_valid=row_valid, level_mask=level_mask)
+
+
+@dataclasses.dataclass
+class _PlanScanStats:
+    rows: int
+    edges: int
+
+
+class IndexStore:
+    """An open store directory: the resident tier as a plan-less
+    :class:`HoDIndex` plus one :class:`SegmentReader` per sweep plan,
+    all sharing one page cache and one metering device."""
+
+    def __init__(self, path: str, device: Optional[BlockDevice] = None,
+                 cache: Optional[PageCache] = None):
+        resident = os.path.join(path, RESIDENT_FILE)
+        if not os.path.isfile(resident):
+            raise FileNotFoundError(
+                f"{path}: not a HoD index store (no {RESIDENT_FILE})")
+        self.path = path
+        self._plan_scan: Dict[str, _PlanScanStats] = {}
+        with np.load(resident) as z:
+            self.block_bytes = int(z["block_bytes"])
+            self.resident = HoDIndex._from_npz(z)
+            for name in SEGMENT_NAMES:
+                self._plan_scan[name] = _PlanScanStats(
+                    rows=int(z[f"{name}_rows"]),
+                    edges=int(z[f"{name}_edges"]))
+        if device is not None and device.block_bytes != self.block_bytes:
+            raise ValueError(
+                f"{path}: metering device block size "
+                f"({device.block_bytes}) != store block size "
+                f"({self.block_bytes}) — I/O accounting would be wrong")
+        self.device = device or BlockDevice(block_bytes=self.block_bytes)
+        self.cache = cache if cache is not None else PageCache()
+        self.segments: Dict[str, SegmentReader] = {}
+        try:
+            for i, name in enumerate(SEGMENT_NAMES):
+                self.segments[name] = SegmentReader(
+                    os.path.join(path, f"{name}.seg"),
+                    base_block=i * _SEGMENT_ID_STRIDE, device=self.device,
+                    cache=self.cache, name=name)
+        except Exception:
+            self.close()    # don't leak fds of segments already opened
+            raise
+
+    # --------------------------------------------------------------- queries
+    def n_real(self, name: str) -> int:
+        return self.segments[name].n_real
+
+    def read_level(self, name: str, lvl: int):
+        return self.segments[name].read_level(lvl)
+
+    def read_plan(self, name: str) -> SweepPlan:
+        return self.segments[name].read_plan()
+
+    # ------------------------------------------------------------ accounting
+    def store_bytes(self) -> int:
+        """Total on-disk size of the store (resident + segments) — the
+        denominator for ``cache_bytes`` budgets."""
+        return (os.path.getsize(os.path.join(self.path, RESIDENT_FILE))
+                + segment_bytes(self.path))
+
+    def segment_bytes(self) -> int:
+        """On-disk size of the streamed tier only (the three segments)."""
+        return segment_bytes(self.path)
+
+    def scan_bytes(self, sssp: bool = False,
+                   core_mode: str = "closure") -> int:
+        """Modeled compact-payload cost of one full sweep — the shared
+        :func:`~repro.core.index.scan_cost_bytes` model over the
+        persisted row/edge counts, no plan materialization needed."""
+        def plan_cost(name: str, include_assoc: bool) -> int:
+            st = self._plan_scan[name]
+            return scan_cost_bytes(st.rows, st.edges, include_assoc)
+        total = plan_cost("plan_f", sssp) + plan_cost("plan_b", sssp)
+        if sssp:
+            total += plan_cost("plan_core", True)
+        return total + core_scan_bytes(self.resident, core_mode)
+
+    def close(self) -> None:
+        for seg in self.segments.values():
+            seg.close()
+
+
+def segment_bytes(path: str) -> int:
+    """On-disk size of a store's streamed tier (the three segment
+    files) — the usual denominator for ``cache_bytes`` budgets; pure
+    ``os.path.getsize``, no store open needed."""
+    return sum(os.path.getsize(os.path.join(path, f"{name}.seg"))
+               for name in SEGMENT_NAMES)
+
+
+def open_store(path: str, device: Optional[BlockDevice] = None,
+               cache: Optional[PageCache] = None) -> IndexStore:
+    return IndexStore(path, device=device, cache=cache)
+
+
+def load_store(path: str) -> HoDIndex:
+    """Fully materialize a store back into an in-memory :class:`HoDIndex`
+    (plans included, bit-exact) — the compatibility/inspection path; a
+    serving deployment streams through :class:`IndexStore` instead."""
+    store = IndexStore(path)
+    try:
+        ix = store.resident
+        for name in SEGMENT_NAMES:
+            setattr(ix, name, store.read_plan(name))
+        return ix
+    finally:
+        store.close()

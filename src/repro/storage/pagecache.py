@@ -1,0 +1,169 @@
+"""Bounded-byte page cache over block-file segments (DESIGN.md §6).
+
+The store's unit of I/O is one fixed-size block of a segment file
+(`storage/blockfile.py`); the cache's unit of residency is the same
+block.  :class:`PageCache` keeps at most ``capacity_bytes`` of blocks
+resident and answers every block fetch either from memory (*hit* — no
+device charge) or by invoking the caller's loader (*miss* — the loader
+reads the block from the segment file and meters it through the shared
+:class:`~repro.core.io_sim.BlockDevice`, so ``IOStats`` reflects actual
+bytes read: sequential when a level scan streams consecutive blocks,
+random when cache hits make the miss pattern skip around).
+
+Two eviction policies:
+
+* ``"lru"`` (default) — strict least-recently-used order;
+* ``"clock"`` — second-chance/CLOCK: a hit sets the block's reference
+  bit instead of moving it, and the eviction hand skips (and clears)
+  referenced blocks once before evicting.
+
+The cache is shared by every segment of a store and by the prefetch
+thread (`storage/stream.py`), so all state — residency map, byte
+budget, counters — is guarded by one lock.  The lock is *held across
+the loader call*: concurrent queries serialize on disk reads, which
+keeps budget enforcement exact (the resident byte count can never
+overshoot between a load and its insertion) and matches the one-spindle
+device model.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Callable, Hashable, Optional
+
+__all__ = ["CacheStats", "PageCache"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_read: int = 0     # fetched via loaders (actual "disk" bytes)
+    peak_bytes: int = 0     # high-water mark of resident bytes
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __sub__(self, other: "CacheStats") -> "CacheStats":
+        """Counter delta (for per-batch reporting); peak is kept as-is."""
+        return CacheStats(self.hits - other.hits,
+                          self.misses - other.misses,
+                          self.evictions - other.evictions,
+                          self.bytes_read - other.bytes_read,
+                          self.peak_bytes)
+
+    def snapshot(self) -> "CacheStats":
+        return dataclasses.replace(self)
+
+
+class PageCache:
+    """LRU/CLOCK block cache with a hard byte budget.
+
+    ``capacity_bytes=None`` means unbounded (everything read stays
+    resident — the 100%-of-index serving regime); ``capacity_bytes=0``
+    disables caching entirely (every fetch is a miss).  A single block
+    larger than the whole budget is returned to the caller but never
+    cached.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = None,
+                 policy: str = "lru"):
+        if policy not in ("lru", "clock"):
+            raise ValueError(f"unknown eviction policy: {policy!r}")
+        if capacity_bytes is not None and capacity_bytes < 0:
+            raise ValueError("capacity_bytes must be >= 0 or None")
+        self.capacity_bytes = capacity_bytes
+        self.policy = policy
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        # key -> block bytes; insertion/recency order per policy
+        self._blocks: "collections.OrderedDict[Hashable, bytes]" = \
+            collections.OrderedDict()
+        self._ref: dict = {}    # CLOCK reference bits
+        self._bytes = 0         # running resident total (O(1) budget checks)
+
+    # ------------------------------------------------------------- interface
+    def get(self, key: Hashable, load: Callable[[], bytes]) -> bytes:
+        """Return the block for ``key``, loading (and caching) on a miss."""
+        with self._lock:
+            data = self._blocks.get(key)
+            if data is not None:
+                self.stats.hits += 1
+                if self.policy == "lru":
+                    self._blocks.move_to_end(key)
+                else:
+                    self._ref[key] = True
+                return data
+            self.stats.misses += 1
+            data = load()
+            self.stats.bytes_read += len(data)
+            self._insert(key, data)
+            return data
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def resident_keys(self):
+        """Keys currently cached, in eviction order (head evicts first)."""
+        with self._lock:
+            return list(self._blocks.keys())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._blocks.clear()
+            self._ref.clear()
+            self._bytes = 0
+
+    def reset_stats(self) -> CacheStats:
+        """Zero the counters (cache contents stay resident)."""
+        with self._lock:
+            out, self.stats = self.stats, CacheStats()
+            return out
+
+    # ------------------------------------------------------------- internals
+    def _insert(self, key: Hashable, data: bytes) -> None:
+        cap = self.capacity_bytes
+        if cap is not None and len(data) > cap:
+            return                      # cannot fit even alone: don't cache
+        self._blocks[key] = data
+        self._ref[key] = False          # fresh blocks start unreferenced
+        self._bytes += len(data)
+        if cap is not None:
+            while self._bytes > cap:
+                before = self._bytes
+                self._evict_one(keep=key)
+                if self._bytes == before:   # nothing evictable left
+                    break
+        self.stats.peak_bytes = max(self.stats.peak_bytes, self._bytes)
+
+    def _evict_one(self, keep: Hashable) -> None:
+        if self.policy == "lru":
+            for victim in self._blocks:
+                if victim != keep:
+                    break
+            else:
+                return
+        else:                           # CLOCK: second chance
+            victim = None
+            for _pass in range(2):
+                for k in list(self._blocks):
+                    if k == keep:
+                        continue
+                    if self._ref.get(k):
+                        self._ref[k] = False        # spare once
+                        self._blocks.move_to_end(k)  # advance the hand
+                    else:
+                        victim = k
+                        break
+                if victim is not None:
+                    break
+            if victim is None:
+                return
+        self._bytes -= len(self._blocks.pop(victim))
+        self._ref.pop(victim, None)
+        self.stats.evictions += 1

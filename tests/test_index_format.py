@@ -1,8 +1,10 @@
 """Index ``.npz`` format versioning + SweepPlan serialization.
 
-v2 files persist the static-shape sweep plans (DESIGN.md §5); v1 files
+v2+ files persist the static-shape sweep plans (DESIGN.md §5); v1 files
 (chunk arrays only) must still load — rebuilding the plans on the fly
-with a warning — and answer identical queries.
+with a warning — and answer identical queries.  v3 marks the store
+generation (same ``.npz`` keys; the disk-resident block store lives in
+`repro.storage` and is covered by tests/test_storage.py).
 """
 import numpy as np
 import pytest
@@ -30,15 +32,15 @@ def _as_legacy_v1(path: str, legacy_path: str) -> None:
     np.savez_compressed(legacy_path, **v1)
 
 
-def test_saved_file_is_stamped_v2(packed, tmp_path):
+def test_saved_file_is_stamped_current_version(packed, tmp_path):
     _, ix = packed
     path = str(tmp_path / "ix.npz")
     ix.save(path)
-    z = np.load(path)
-    assert int(z["format_version"]) == FORMAT_VERSION == 2
-    for pre in ("pf", "pb", "pc"):
-        for part in ("dst", "src", "w", "assoc", "valid", "mask"):
-            assert f"{pre}_{part}" in z.files
+    with np.load(path) as z:
+        assert int(z["format_version"]) == FORMAT_VERSION == 3
+        for pre in ("pf", "pb", "pc"):
+            for part in ("dst", "src", "w", "assoc", "valid", "mask"):
+                assert f"{pre}_{part}" in z.files
 
 
 def test_roundtrip_preserves_plans_bitexact(packed, tmp_path):
@@ -46,7 +48,7 @@ def test_roundtrip_preserves_plans_bitexact(packed, tmp_path):
     path = str(tmp_path / "ix.npz")
     ix.save(path)
     ix2 = HoDIndex.load(path)
-    assert ix2.format_version == 2 and ix2.k_cap == ix.k_cap
+    assert ix2.format_version == FORMAT_VERSION and ix2.k_cap == ix.k_cap
     for field in ("plan_f", "plan_b", "plan_core"):
         a, b = getattr(ix, field), getattr(ix2, field)
         np.testing.assert_array_equal(a.dst, b.dst)
@@ -80,6 +82,28 @@ def test_legacy_v1_file_loads_with_warning_and_rebuilds(packed, tmp_path):
     with _w.catch_warnings():
         _w.simplefilter("error")
         HoDIndex.load(path)
+
+
+def test_v2_file_still_loads_without_warning(packed, tmp_path):
+    """A v2 file (plans serialized, pre-store stamp) loads silently and
+    keeps its plans — the store generation only added formats."""
+    _, ix = packed
+    path = str(tmp_path / "ix.npz")
+    v2 = str(tmp_path / "ix_v2.npz")
+    ix.save(path)
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files if k != "format_version"}
+    np.savez_compressed(v2, format_version=np.int64(2), **data)
+
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        ix2 = HoDIndex.load(v2)
+    assert ix2.format_version == 2
+    np.testing.assert_array_equal(ix.plan_f.w, ix2.plan_f.w)
+    src = np.array([0, 64], dtype=np.int32)
+    np.testing.assert_array_equal(QueryEngine(ix).ssd(src),
+                                  QueryEngine(ix2).ssd(src))
 
 
 def test_legacy_and_v2_answer_identical_queries(packed, tmp_path):
