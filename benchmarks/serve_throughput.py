@@ -41,7 +41,11 @@ from .common import build_hod_cached, dataset_suite, fmt_row
 BATCH_SIZES = (1, 16, 128)
 N_REQUESTS = 256
 COLD_BATCH = 16
-CACHE_FRACS = (0.05, 0.25, 1.0)
+#: (cache fraction, eviction policy) grid: the 2q sweep reproduces the
+#: memory-constrained regime under the scan-resistant default, the lru
+#: row at 25% keeps the PR-3 thrash baseline measurable next to it.
+STORE_CONFIGS = ((0.05, "2q"), (0.25, "lru"), (0.25, "arc"),
+                 (0.25, "2q"), (1.0, "2q"))
 STORE_BATCH = 16
 STORE_REQUESTS = 64
 
@@ -65,8 +69,12 @@ def cold_start_latency(ix) -> dict:
 
 
 def store_cache_sweep(ix, sources: np.ndarray) -> list:
-    """Serve the same request stream from a block store under page-cache
-    budgets of {5%, 25%, 100%} of the streamed segment bytes."""
+    """Serve the same request stream from a block store under the
+    (page-cache budget, eviction policy) grid of ``STORE_CONFIGS``.
+
+    The scan-resistant policies + the v4 affinity layout are what make
+    the mid-budget rows meaningful: under PR-3's LRU + block-aligned
+    slabs the 5%/25% rows thrashed to a 0.0 hit rate."""
     rows = []
     with tempfile.TemporaryDirectory() as tmp:
         store_dir = os.path.join(tmp, "store")
@@ -75,13 +83,13 @@ def store_cache_sweep(ix, sources: np.ndarray) -> list:
         print(f"\n-- store-backed serving: {seg_bytes/1e6:.2f} MB of "
               f"segments, {sources.shape[0]} requests, "
               f"batch={STORE_BATCH} --")
-        print(fmt_row(["cache", "hit rate", "real MB", "modeled MB",
-                       "io ms", "queries/s"]))
-        for frac in CACHE_FRACS:
+        print(fmt_row(["cache", "policy", "hit rate", "real MB",
+                       "modeled MB", "io ms", "queries/s"]))
+        for frac, policy in STORE_CONFIGS:
             budget = int(frac * seg_bytes)
             server = QueryServer(store_path=store_dir, cache_bytes=budget,
                                  batch_size=STORE_BATCH, cache_entries=0,
-                                 warm_start=True)
+                                 cache_policy=policy, warm_start=True)
             try:
                 results = server.serve_stream(sources)
             finally:
@@ -92,12 +100,13 @@ def store_cache_sweep(ix, sources: np.ndarray) -> list:
                 block_bytes=server.device.block_bytes)
             modeled_mb = server.modeled_scan_bytes * st.batches / 1e6
             print(fmt_row([
-                f"{frac:.0%}", f"{st.page_hit_rate():.1%}",
+                f"{frac:.0%}", policy, f"{st.page_hit_rate():.1%}",
                 f"{st.store_bytes_read/1e6:.2f}", f"{modeled_mb:.2f}",
                 f"{io_s*1e3:.1f}", f"{st.throughput():.0f}"]))
             assert all(np.isfinite(r.dist[: ix.n]).all() for r in results)
             rows.append({
-                "cache_frac": frac, "cache_bytes": budget,
+                "cache_frac": frac, "policy": policy,
+                "cache_bytes": budget,
                 "hit_rate": st.page_hit_rate(),
                 "real_bytes": st.store_bytes_read,
                 "modeled_bytes": server.modeled_scan_bytes * st.batches,

@@ -67,8 +67,12 @@ def core_scan_bytes(ix: "HoDIndex", core_mode: str) -> int:
 #: load time); v2 = chunk arrays + serialized SweepPlans; v3 = the
 #: store generation: same ``.npz`` keys, plus the disk-resident block
 #: store (`repro.storage`, :meth:`HoDIndex.save_store`) as the serving
-#: format.  v1/v2 ``.npz`` files keep loading.
-FORMAT_VERSION = 3
+#: format; v4 = the affinity segment layout: level slabs stored
+#: compactly (padding rows trimmed) and packed back-to-back at byte
+#: granularity so co-accessed level runs share block neighborhoods,
+#: plus per-block CRCs (DESIGN.md §6).  v1/v2/v3 ``.npz`` files and v3
+#: ``.seg`` segment files keep loading.
+FORMAT_VERSION = 4
 
 
 @dataclasses.dataclass

@@ -293,6 +293,10 @@ class QueryEngine:
         s = sources_perm.shape[0]
         pred = jnp.full((s, ix.n_pad), -1, jnp.int32)
         recon = self._recon_level_body(dist)
+        # The per-plan reconstruction scatters are max-merges over a
+        # fixed `dist`, so the plan order commutes; the store-backed
+        # engine exploits this by walking plans in reverse (cache
+        # affinity with the distance pass) and stays bit-identical.
         for plan in (self._plan_f, self._plan_c, self._plan_b):
             pred = self._run_plan(pred, plan, recon)
         return dist, pred

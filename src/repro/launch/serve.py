@@ -21,6 +21,9 @@ Two index residency modes (DESIGN.md §6):
   index streams from its block store through a bounded page cache, the
   device meters *actual* block reads (cache misses), and per-batch
   real-vs-modeled I/O plus the cache hit-rate land in ``batch_io``.
+  ``cache_policy`` picks the eviction policy (``"2q"`` by default —
+  the scan-resistant choice for cyclic sweeps; ``"arc"``, ``"lru"``,
+  ``"clock"`` also available, DESIGN.md §6).
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 32
     PYTHONPATH=src python -m repro.launch.serve --store --cache-frac 0.05
@@ -104,7 +107,7 @@ class QueryServer:
                  warm_start: bool = False,
                  store_path: Optional[str] = None,
                  cache_bytes: Optional[int] = None,
-                 cache_policy: str = "lru",
+                 cache_policy: str = "2q",
                  engine_opts: Optional[dict] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -385,6 +388,10 @@ def main() -> None:
     ap.add_argument("--cache-frac", type=float, default=0.25,
                     help="page-cache budget as a fraction of the store "
                          "segment bytes (with --store)")
+    ap.add_argument("--cache-policy", default="2q",
+                    choices=["lru", "clock", "arc", "2q"],
+                    help="page-cache eviction policy (with --store); "
+                         "arc/2q are scan-resistant (DESIGN.md §6)")
     args = ap.parse_args()
 
     g = (grid_road_graph(args.side) if args.graph == "road"
@@ -409,6 +416,7 @@ def main() -> None:
                              batch_size=args.batch, sssp=args.sssp,
                              cache_entries=args.cache,
                              max_wait_ms=args.max_wait_ms,
+                             cache_policy=args.cache_policy,
                              engine_opts={"use_pallas": args.use_pallas})
     else:
         eng = QueryEngine(ix, use_pallas=args.use_pallas)

@@ -11,31 +11,44 @@ A *store* is a directory holding the index in two tiers:
   file* per :class:`~repro.core.index.SweepPlan`, the tier queries
   stream.  Each segment is a sequence of fixed-size blocks::
 
-      block 0        header: magic, format version (3), block_bytes,
+      block 0        header: magic, format version (4), block_bytes,
                      n_real/l_pad/m_pad/k_fix/sentinel, footer extent
-      blocks 1..     one *slab* per real level, in scan order, each
-                     block-aligned and ``blocks_per_level`` long
-      footer         JSON per-level extent table [start_block,
-                     n_blocks, payload_bytes] (self-description /
-                     integrity check — slab geometry is also derivable
-                     from the header alone)
+      blocks 1..     the *affinity-packed* level slabs: one compact
+                     slab per real level, in scan order, back-to-back
+                     at byte granularity (levels share blocks)
+      footer         JSON per-level extent table [byte_off, byte_len,
+                     m_real] + one CRC32 per data block
 
-  A level slab packs the level's plan slice contiguously —
-  ``dst[int32 M] · row_valid[u8 M] · src_idx[int32 M·K] · w[f32 M·K] ·
-  assoc[int32 M·K]`` — so a level read is ``blocks_per_level``
-  *consecutive* blocks: a full sweep is one sequential scan per segment
-  (the paper's §4.5 invariant, now at actual-file granularity), and a
-  partially-warm cache turns the misses into random reads.  Only real
-  levels are stored; the plan's padding levels (``level_mask`` False)
-  are reconstructed from header defaults, bit-exactly.
+  The v4 *affinity layout* (build-time partitioning, ROADMAP): a level
+  slab stores only the level's **real** rows —
+  ``dst[int32 m] · src_idx[int32 m·K] · w[f32 m·K] · assoc[int32 m·K]``
+  with ``m = m_real ≤ M_pad`` — and consecutive slabs are packed into
+  the same block neighborhood instead of each being block-aligned.
+  Two effects on a partial cache: the per-sweep block working set
+  shrinks by the padding-row envelope (often 2-3x on level-skewed
+  graphs), and adjacent levels *share* their boundary block, so every
+  level hand-off re-references a just-read block — hits that exist at
+  any budget.  Padding rows and padding levels are reconstructed from
+  header defaults, bit-exactly.  A full sweep is still one sequential
+  scan per segment (the paper's §4.5 invariant): blocks are read in
+  ascending id order.  v3 segments (block-aligned full-``M_pad``
+  slabs) keep loading.
 
 Every block read goes through a :class:`~repro.storage.pagecache
 .PageCache` and — on a miss — is metered through the store's
 :class:`~repro.core.io_sim.BlockDevice` with a *global* block id
-(segments get disjoint id ranges), so ``IOStats`` classifies the actual
-read pattern: consecutive-block level scans count sequential, skips
-introduced by cache hits count random.  Open-time header/footer reads
-are not charged; only query-time block fetches are.
+(segments get disjoint id ranges), so ``IOStats`` classifies the
+actual read pattern.  Misses are also integrity-checked against the
+footer's per-block CRC32, so a corrupt segment surfaces as a
+``ValueError`` in the querying thread instead of silent garbage
+distances.  Open-time header/footer reads are not charged; only
+query-time block fetches are.
+
+Segment-aware admission (DESIGN.md §6): ``IndexStore`` marks the
+small, repeatedly-re-read segments (``plan_core`` by default) as
+*pinned* — their blocks are pinned into the page cache on first read
+(within the cache's pin budget), so a once-per-sweep ``plan_f`` scan
+can never evict them.
 """
 from __future__ import annotations
 
@@ -43,7 +56,8 @@ import dataclasses
 import json
 import os
 import struct
-from typing import Dict, Optional, Tuple
+import zlib
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,13 +68,18 @@ from .pagecache import PageCache
 
 __all__ = ["IndexStore", "SegmentReader", "save_store", "open_store",
            "load_store", "segment_bytes", "SEGMENT_NAMES",
-           "DEFAULT_BLOCK_BYTES"]
+           "DEFAULT_BLOCK_BYTES", "PIN_SEGMENTS"]
 
-MAGIC = b"HODSEG03"
+MAGIC = b"HODSEG04"
+_MAGIC_V3 = b"HODSEG03"
 _HEADER = struct.Struct("<8sIIIIIIIIQQ")   # magic, version, block_bytes,
 # n_real, l_pad, m_pad, k_fix, sentinel, reserved, footer_off, footer_len
 RESIDENT_FILE = "resident.npz"
 SEGMENT_NAMES = ("plan_f", "plan_b", "plan_core")
+#: segments pinned resident by default (segment-aware admission): the
+#: core plan is small, read once per SSSP reconstruction, and exactly
+#: the kind of hot tier a cyclic ``plan_f`` scan would otherwise evict.
+PIN_SEGMENTS = ("plan_core",)
 #: paper §2 block size (64 KiB) — the modeled device's unit.
 DEFAULT_BLOCK_BYTES = 65536
 #: disjoint global-block-id ranges per segment, so the device's
@@ -70,39 +89,70 @@ _SEGMENT_ID_STRIDE = 1 << 40
 INF = np.float32(np.inf)
 
 
-def _level_payload_bytes(m_pad: int, k_fix: int) -> int:
-    return m_pad * (4 + 1) + m_pad * k_fix * (4 + 4 + 4)
+def _trim_rows(plan: SweepPlan, lvl: int, sentinel: int) -> int:
+    """Number of leading real rows of a level slab, or ``-1`` when the
+    level is not a clean real-prefix + default-padding split (never the
+    case for ``pack_index`` plans; kept as a lossless fallback)."""
+    valid = plan.row_valid[lvl]
+    m_real = int(valid.sum())
+    if not (valid[:m_real].all() and not valid[m_real:].any()):
+        return -1
+    if not ((plan.dst[lvl, m_real:] == sentinel).all()
+            and (plan.src_idx[lvl, m_real:] == sentinel).all()
+            and np.isinf(plan.w[lvl, m_real:]).all()
+            and (plan.assoc[lvl, m_real:] == -1).all()):
+        return -1
+    return m_real
 
 
 # --------------------------------------------------------------------- write
+def _level_slab(plan: SweepPlan, lvl: int, m_real: int) -> bytes:
+    """Serialize one level: compact (real rows only) when ``m_real >= 0``,
+    else the full rectangle with an explicit valid vector."""
+    if m_real >= 0:
+        sl = slice(0, m_real)
+        parts = (np.ascontiguousarray(plan.dst[lvl, sl], np.int32),
+                 np.ascontiguousarray(plan.src_idx[lvl, sl], np.int32),
+                 np.ascontiguousarray(plan.w[lvl, sl], np.float32),
+                 np.ascontiguousarray(plan.assoc[lvl, sl], np.int32))
+    else:
+        parts = (np.ascontiguousarray(plan.dst[lvl], np.int32),
+                 np.ascontiguousarray(plan.row_valid[lvl], np.uint8),
+                 np.ascontiguousarray(plan.src_idx[lvl], np.int32),
+                 np.ascontiguousarray(plan.w[lvl], np.float32),
+                 np.ascontiguousarray(plan.assoc[lvl], np.int32))
+    return b"".join(p.tobytes() for p in parts)
+
+
 def _write_segment(path: str, plan: SweepPlan, sentinel: int,
                    block_bytes: int) -> None:
     if block_bytes < _HEADER.size:
         raise ValueError(f"block_bytes must be >= {_HEADER.size}")
     n_real = plan.n_real_levels
-    m_pad, k_fix = plan.m_pad, plan.k_fix
-    payload = _level_payload_bytes(m_pad, k_fix)
-    bpl = max(1, -(-payload // block_bytes))
-    footer = json.dumps({
-        "extents": [[1 + l * bpl, bpl, payload] for l in range(n_real)],
-        "n_real": n_real,
-    }).encode()
-    footer_off = block_bytes * (1 + n_real * bpl)
+    extents = []
+    slabs = []
+    off = block_bytes                     # data starts at block 1
+    for lvl in range(n_real):
+        m_real = _trim_rows(plan, lvl, sentinel)
+        slab = _level_slab(plan, lvl, m_real)
+        extents.append([off, len(slab), m_real])
+        slabs.append(slab)
+        off += len(slab)
+    data = b"".join(slabs)
+    pad = (-len(data)) % block_bytes
+    data += b"\0" * pad
+    n_data_blocks = len(data) // block_bytes
+    crcs = [zlib.crc32(data[i * block_bytes:(i + 1) * block_bytes])
+            for i in range(n_data_blocks)]
+    footer = json.dumps({"extents": extents, "n_real": n_real,
+                         "crcs": crcs}).encode()
+    footer_off = block_bytes * (1 + n_data_blocks)
     header = _HEADER.pack(MAGIC, FORMAT_VERSION, block_bytes, n_real,
-                          plan.l_pad, m_pad, k_fix, sentinel, 0,
+                          plan.l_pad, plan.m_pad, plan.k_fix, sentinel, 0,
                           footer_off, len(footer))
     with open(path, "wb") as f:
         f.write(header.ljust(block_bytes, b"\0"))
-        for lvl in range(n_real):
-            slab = b"".join((
-                np.ascontiguousarray(plan.dst[lvl], np.int32).tobytes(),
-                np.ascontiguousarray(plan.row_valid[lvl],
-                                     np.uint8).tobytes(),
-                np.ascontiguousarray(plan.src_idx[lvl], np.int32).tobytes(),
-                np.ascontiguousarray(plan.w[lvl], np.float32).tobytes(),
-                np.ascontiguousarray(plan.assoc[lvl], np.int32).tobytes()))
-            assert len(slab) == payload
-            f.write(slab.ljust(bpl * block_bytes, b"\0"))
+        f.write(data)
         f.write(footer)
 
 
@@ -111,10 +161,11 @@ def save_store(ix: HoDIndex, path: str,
     """Write ``ix`` as a disk-resident store directory at ``path``.
 
     The resident tier reuses the ``.npz`` machinery (minus the plan
-    arrays); each sweep plan becomes one block segment file.  Per-plan
-    compact-payload counts (real rows/edges) ride in the resident file
-    so a store-backed server can model the paper-comparable scan cost
-    without materializing any plan.
+    arrays); each sweep plan becomes one block segment file in the v4
+    affinity layout (compact level slabs sharing block neighborhoods).
+    Per-plan compact-payload counts (real rows/edges) ride in the
+    resident file so a store-backed server can model the
+    paper-comparable scan cost without materializing any plan.
     """
     ix.ensure_plans()
     os.makedirs(path, exist_ok=True)
@@ -136,14 +187,19 @@ def save_store(ix: HoDIndex, path: str,
 
 # ---------------------------------------------------------------------- read
 class SegmentReader:
-    """One open segment file: header-described slab geometry + cached,
-    device-metered block reads (thread-safe via ``os.pread``)."""
+    """One open segment file: header/footer-described slab geometry +
+    cached, CRC-checked, device-metered block reads (thread-safe via
+    ``os.pread``).  Reads both the v4 affinity layout and v3
+    block-aligned segments."""
 
     def __init__(self, path: str, base_block: int, device: BlockDevice,
-                 cache: PageCache, name: str):
+                 cache: PageCache, name: str, pin_blocks: bool = False):
         self.path, self.name = path, name
         self.device, self.cache = device, cache
         self.base_block = base_block
+        #: pin this segment's blocks into the cache on read (segment-
+        #: aware admission; subject to the cache's pin budget).
+        self.pin_blocks = bool(pin_blocks)
         # Cache keys are namespaced by the segment's absolute path: a
         # PageCache shared between stores (one global memory budget)
         # must never serve one store's blocks to another.
@@ -151,25 +207,22 @@ class SegmentReader:
         self._fd = os.open(path, os.O_RDONLY)
         try:
             raw = os.pread(self._fd, _HEADER.size, 0)
-            (magic, version, self.block_bytes, self.n_real, self.l_pad,
-             self.m_pad, self.k_fix, self.sentinel, _res,
+            (magic, self.version, self.block_bytes, self.n_real,
+             self.l_pad, self.m_pad, self.k_fix, self.sentinel, _res,
              footer_off, footer_len) = _HEADER.unpack(raw)
-            if magic != MAGIC:
+            if magic not in (MAGIC, _MAGIC_V3):
                 raise ValueError(f"{path}: not a HoD segment file "
                                  f"(magic {magic!r})")
-            if version > FORMAT_VERSION:
-                raise ValueError(f"{path}: segment format v{version} is "
-                                 f"newer than this reader "
-                                 f"(v{FORMAT_VERSION})")
-            self.payload_bytes = _level_payload_bytes(self.m_pad,
-                                                      self.k_fix)
-            self.blocks_per_level = max(1, -(-self.payload_bytes
-                                             // self.block_bytes))
+            if self.version > FORMAT_VERSION:
+                raise ValueError(f"{path}: segment format "
+                                 f"v{self.version} is newer than this "
+                                 f"reader (v{FORMAT_VERSION})")
             footer = json.loads(os.pread(self._fd, footer_len, footer_off))
             if footer["n_real"] != self.n_real:
                 raise ValueError(
                     f"{path}: footer/header level count mismatch")
             self.extents = footer["extents"]
+            self._crcs = footer.get("crcs")   # absent in v3 segments
         except Exception:
             self.close()
             raise
@@ -183,31 +236,85 @@ class SegmentReader:
     def _load_block(self, block: int) -> bytes:
         data = os.pread(self._fd, self.block_bytes,
                         block * self.block_bytes)
+        if self._crcs is not None and 1 <= block <= len(self._crcs):
+            if zlib.crc32(data) != self._crcs[block - 1]:
+                raise ValueError(
+                    f"{self.path}: CRC mismatch in block {block} — "
+                    "corrupt segment read")
         self.device.access_block(self.base_block + block, len(data))
         return data
 
-    def read_level(self, lvl: int) -> Tuple[np.ndarray, np.ndarray,
-                                            np.ndarray, np.ndarray,
-                                            np.ndarray]:
-        """One real level's ``(dst, src_idx, w, assoc, row_valid)`` slab,
+    def _level_blocks(self, lvl: int) -> Tuple[int, int, int]:
+        """(first_block, last_block, offset_of_first_byte_in_first_block)
+        of one level's slab."""
+        if self.version >= 4:
+            off, length, _ = self.extents[lvl]
+            b0 = off // self.block_bytes
+            b1 = (off + max(length, 1) - 1) // self.block_bytes
+            return b0, b1, off - b0 * self.block_bytes
+        start, n_blocks, _ = self.extents[lvl]
+        return start, start + n_blocks - 1, 0
+
+    def level_keys(self, lvl: int):
+        """The page-cache keys of one level's blocks (for pin/unpin)."""
+        b0, b1, _ = self._level_blocks(lvl)
+        return [(self._cache_ns, b) for b in range(b0, b1 + 1)]
+
+    def _fetch(self, lvl: int, pin: bool) -> bytes:
+        """One level's raw slab bytes via the page cache."""
+        if self.version >= 4 and self.extents[lvl][1] == 0:
+            return b""                  # zero-row level: nothing on disk
+        b0, b1, skip = self._level_blocks(lvl)
+        pin = pin or self.pin_blocks
+        parts = [self.cache.get((self._cache_ns, b),
+                                lambda b=b: self._load_block(b), pin=pin)
+                 for b in range(b0, b1 + 1)]
+        buf = b"".join(parts)
+        if self.version >= 4:
+            off, length, _ = self.extents[lvl]
+            return buf[skip:skip + length]
+        return buf[:self.extents[lvl][2]]
+
+    def read_level(self, lvl: int, pin: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray, np.ndarray]:
+        """One real level's ``(dst, src_idx, w, assoc, row_valid)`` slab
+        at the full ``[M_pad, K_fix]`` rectangle (padding rows
+        reconstructed from header defaults for compact v4 slabs),
         fetched block-by-block through the page cache."""
         if not 0 <= lvl < self.n_real:
             raise IndexError(f"{self.name}: level {lvl} out of range "
                              f"(0..{self.n_real - 1})")
-        start, n_blocks, payload = self.extents[lvl]
-        parts = [self.cache.get((self._cache_ns, b),
-                                lambda b=b: self._load_block(b))
-                 for b in range(start, start + n_blocks)]
-        buf = b"".join(parts)[:payload]
+        buf = self._fetch(lvl, pin)
         m, k = self.m_pad, self.k_fix
+        m_real = self.extents[lvl][2] if self.version >= 4 else -1
+        if m_real < 0:          # full rectangle with explicit valid vector
+            off = 0
+            dst = np.frombuffer(buf, np.int32, m, off); off += 4 * m
+            valid = np.frombuffer(buf, np.uint8, m, off).astype(bool)
+            off += m
+            src = np.frombuffer(buf, np.int32, m * k, off).reshape(m, k)
+            off += 4 * m * k
+            w = np.frombuffer(buf, np.float32, m * k, off).reshape(m, k)
+            off += 4 * m * k
+            assoc = np.frombuffer(buf, np.int32, m * k, off).reshape(m, k)
+            return dst, src, w, assoc, valid
+        # compact slab: real-row prefix + reconstructed default padding
+        dst = np.full(m, self.sentinel, np.int32)
+        src = np.full((m, k), self.sentinel, np.int32)
+        w = np.full((m, k), INF, np.float32)
+        assoc = np.full((m, k), -1, np.int32)
+        valid = np.zeros(m, bool)
+        mr = m_real
         off = 0
-        dst = np.frombuffer(buf, np.int32, m, off); off += 4 * m
-        valid = np.frombuffer(buf, np.uint8, m, off).astype(bool); off += m
-        src = np.frombuffer(buf, np.int32, m * k, off).reshape(m, k)
-        off += 4 * m * k
-        w = np.frombuffer(buf, np.float32, m * k, off).reshape(m, k)
-        off += 4 * m * k
-        assoc = np.frombuffer(buf, np.int32, m * k, off).reshape(m, k)
+        dst[:mr] = np.frombuffer(buf, np.int32, mr, off); off += 4 * mr
+        src[:mr] = np.frombuffer(buf, np.int32, mr * k, off).reshape(mr, k)
+        off += 4 * mr * k
+        w[:mr] = np.frombuffer(buf, np.float32, mr * k, off).reshape(mr, k)
+        off += 4 * mr * k
+        assoc[:mr] = np.frombuffer(buf, np.int32, mr * k,
+                                   off).reshape(mr, k)
+        valid[:mr] = True
         return dst, src, w, assoc, valid
 
     def read_plan(self) -> SweepPlan:
@@ -241,10 +348,16 @@ class _PlanScanStats:
 class IndexStore:
     """An open store directory: the resident tier as a plan-less
     :class:`HoDIndex` plus one :class:`SegmentReader` per sweep plan,
-    all sharing one page cache and one metering device."""
+    all sharing one page cache and one metering device.
+
+    ``pin_segments`` names the segments whose blocks are pinned into
+    the cache on first read (default: the small ``plan_core`` — see
+    :data:`PIN_SEGMENTS`); the cache's pin budget bounds how much can
+    stick, so over-subscription degrades gracefully."""
 
     def __init__(self, path: str, device: Optional[BlockDevice] = None,
-                 cache: Optional[PageCache] = None):
+                 cache: Optional[PageCache] = None,
+                 pin_segments: Optional[Sequence[str]] = PIN_SEGMENTS):
         resident = os.path.join(path, RESIDENT_FILE)
         if not os.path.isfile(resident):
             raise FileNotFoundError(
@@ -265,13 +378,15 @@ class IndexStore:
                 f"({self.block_bytes}) — I/O accounting would be wrong")
         self.device = device or BlockDevice(block_bytes=self.block_bytes)
         self.cache = cache if cache is not None else PageCache()
+        pin_set = frozenset(pin_segments or ())
         self.segments: Dict[str, SegmentReader] = {}
         try:
             for i, name in enumerate(SEGMENT_NAMES):
                 self.segments[name] = SegmentReader(
                     os.path.join(path, f"{name}.seg"),
                     base_block=i * _SEGMENT_ID_STRIDE, device=self.device,
-                    cache=self.cache, name=name)
+                    cache=self.cache, name=name,
+                    pin_blocks=name in pin_set)
         except Exception:
             self.close()    # don't leak fds of segments already opened
             raise
@@ -280,8 +395,24 @@ class IndexStore:
     def n_real(self, name: str) -> int:
         return self.segments[name].n_real
 
-    def read_level(self, name: str, lvl: int):
-        return self.segments[name].read_level(lvl)
+    def read_level(self, name: str, lvl: int, pin: bool = False):
+        return self.segments[name].read_level(lvl, pin=pin)
+
+    def unpin_level(self, name: str, lvl: int) -> None:
+        """Release a level's pin leases (no-op for blocks whose pin
+        never stuck, and for sticky ``pin_segments`` readers).
+
+        The affinity layout makes adjacent levels share their boundary
+        block under ONE pin entry, so a shared block's lease is handed
+        forward: it is excluded here and released when the *next* level
+        is unpinned (or by the sweep-end ledger)."""
+        seg = self.segments[name]
+        if seg.pin_blocks:
+            return      # segment-aware pins are sticky by design
+        keys = set(seg.level_keys(lvl))
+        if lvl + 1 < seg.n_real:
+            keys -= set(seg.level_keys(lvl + 1))
+        self.cache.unpin(keys)
 
     def read_plan(self, name: str) -> SweepPlan:
         return self.segments[name].read_plan()

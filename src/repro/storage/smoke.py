@@ -1,7 +1,8 @@
 """Storage smoke check (CI): build → ``save_store`` → serve from the
-store at a 5% page-cache budget → verify against the in-memory oracle.
+store at 5% and 25% page-cache budgets → verify against the in-memory
+oracle.
 
-Asserts the ISSUE-3 acceptance criteria end to end:
+Asserts the ISSUE-3 and ISSUE-4 acceptance criteria end to end:
 
 * store-served distances are **bit-identical** to the in-memory
   engine's and match the Dijkstra oracle to float tolerance;
@@ -9,7 +10,11 @@ Asserts the ISSUE-3 acceptance criteria end to end:
   5% budget);
 * the server's ``IOStats`` come from *actual* block reads — every byte
   the device metered is a byte the cache read on a miss, and no
-  synthetic scan charge was applied.
+  synthetic scan charge was applied;
+* a partial budget actually buys hit-rate: at 25% under the default
+  scan-resistant policy the hit rate must be strictly positive (the
+  PR-3 LRU cache thrashed to 0.0 here — guarded so policy or layout
+  regressions fail CI).
 
     PYTHONPATH=src python -m repro.storage.smoke
 """
@@ -27,38 +32,42 @@ from .blockfile import segment_bytes
 N_QUERIES = 16
 
 
+def _serve_and_verify(store_dir: str, frac: float, sources: np.ndarray,
+                      direct: np.ndarray) -> QueryServer:
+    """Serve from the store at one cache budget and assert the answers
+    are bit-identical to the in-memory engine's rows."""
+    budget = int(frac * segment_bytes(store_dir))
+    server = QueryServer(store_path=store_dir, cache_bytes=budget,
+                         batch_size=8, cache_entries=0, warm_start=True)
+    try:
+        results = server.serve_stream(sources)
+    finally:
+        server.close()
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(r.dist, direct[i])
+    return server
+
+
 def main() -> None:
     g = gnm_random_digraph(200, 800, seed=11, weighted=True)
     res = build_hod(g, BuildConfig(max_core_nodes=32, max_core_edges=1024,
                                    seed=0))
     ix = pack_index(g, res, chunk=64)
+    rng = np.random.default_rng(0)
+    sources = rng.choice(g.n, size=N_QUERIES,
+                         replace=False).astype(np.int32)
+    direct = QueryEngine(ix).ssd(sources)
+    oracle = dijkstra_reference(g, sources[:4])
+    for i in range(4):
+        finite = np.isfinite(oracle[i])
+        assert np.allclose(direct[i][: g.n][finite], oracle[i][finite],
+                           rtol=1e-5)
 
     with tempfile.TemporaryDirectory() as tmp:
         store_dir = f"{tmp}/store"
         ix.save_store(store_dir, block_bytes=4096)
-        budget = int(0.05 * segment_bytes(store_dir))
 
-        server = QueryServer(store_path=store_dir, cache_bytes=budget,
-                             batch_size=8, cache_entries=0,
-                             warm_start=True)
-        rng = np.random.default_rng(0)
-        sources = rng.choice(g.n, size=N_QUERIES,
-                             replace=False).astype(np.int32)
-        try:
-            results = server.serve_stream(sources)
-        finally:
-            server.close()
-
-        engine = QueryEngine(ix)
-        direct = engine.ssd(sources)
-        for i, r in enumerate(results):
-            np.testing.assert_array_equal(r.dist, direct[i])
-        oracle = dijkstra_reference(g, sources[:4])
-        for i in range(4):
-            finite = np.isfinite(oracle[i])
-            assert np.allclose(results[i].dist[: g.n][finite], oracle[i][finite],
-                               rtol=1e-5)
-
+        server = _serve_and_verify(store_dir, 0.05, sources, direct)
         st = server.stats
         io = server.modeled_io()
         assert st.page_misses > 0, "no real block reads happened"
@@ -66,10 +75,20 @@ def main() -> None:
             f"hit-rate {st.page_hit_rate()} not memory-constrained at 5%"
         assert io.bytes_seq + io.bytes_rand == st.store_bytes_read, \
             "device bytes != actual cache-miss reads (synthetic charge?)"
+
+        # 25% budget: the scan-resistant default (2Q + affinity layout)
+        # must buy actual hit-rate — 0.0 here means cyclic-scan thrash
+        # is back (the PR-3 LRU baseline).
+        st25 = _serve_and_verify(store_dir, 0.25, sources, direct).stats
+        assert st25.page_hit_rate() > 0.0, \
+            "25% cache budget bought a 0.0 hit rate — scan-resistant " \
+            "policy or affinity layout regressed"
+
         print(f"storage smoke OK: {st.requests} queries from a "
-              f"{budget}-byte cache ({st.page_hit_rate():.1%} hit rate), "
+              f"5% cache ({st.page_hit_rate():.1%} hit rate), "
               f"{st.store_bytes_read/1e6:.2f} MB actually read "
               f"({io.seq_blocks} seq / {io.rand_blocks} rand blocks), "
+              f"{st25.page_hit_rate():.1%} hit rate at a 25% budget, "
               f"answers bit-identical to the in-memory engine")
 
 

@@ -14,15 +14,32 @@ synthetic charge.
 Answers are bit-identical to the in-memory engine: the level bodies are
 the same methods, applied to the same slab values in the same order —
 ``lax.scan`` over resident levels and a Python loop over streamed
-levels compose identical (min, +)/max scatters.
+levels compose identical (min, +)/max scatters.  SSSP reconstruction
+walks the plans in the order ``plan_b → plan_core → plan_f`` (the
+reverse of the distance pass, for cache reuse); the per-plan
+max-merges commute, so predecessors stay bit-identical to the
+in-memory executor's ``f → core → b`` order (asserted in
+tests/test_storage.py).
+
+**Recon pinning** (ROADMAP "recon reuse"; DESIGN.md §6): an SSSP query
+re-reads every distance-pass block during reconstruction, so the
+distance sweeps pin the levels they stream (``PageCache`` pin leases,
+bounded by the pin budget) and reconstruction unpins each level right
+after consuming it.  ``plan_b`` is re-read first and is usually still
+warm even unpinned; ``plan_f`` — touched a whole sweep earlier, i.e.
+exactly the blocks a cyclic-thrash policy would have dropped — is the
+one the pins save.  A ``finally`` ledger releases any leftover leases
+even when a sweep raises.
 
 ``prefetch=True`` overlaps the next level's block reads with the
 current level's compute on a single background thread — the streaming
 analogue of read-ahead.  The page cache and segment readers are
 thread-safe (one lock, ``os.pread``), so the prefetcher needs no extra
-coordination: the prefetched slab is handed straight to the compute
-loop (its blocks also land in the cache for later sweeps; the compute
-loop does not re-fetch them).
+coordination.  Loader failures (e.g. a CRC mismatch on a corrupt
+segment) always surface in the querying thread: the level generator
+re-raises the prefetched exception on the next pull, and if the
+consumer abandons the sweep mid-stream the generator's cleanup drains
+the in-flight future so the error is never silently swallowed.
 """
 from __future__ import annotations
 
@@ -75,24 +92,51 @@ class StreamingQueryEngine(QueryEngine):
             if self.prefetch else None)
 
     # ------------------------------------------------------------- streaming
-    def _levels(self, name: str) -> Iterator[tuple]:
-        """Yield one plan's level slabs in scan order, optionally keeping
-        the next level's blocks in flight on the prefetch thread."""
+    def _levels(self, name: str, pin: bool = False,
+                unpin_after: bool = False) -> Iterator[tuple]:
+        """Yield one plan's level slabs in scan order.
+
+        ``pin=True`` takes a pin lease on every block read (the
+        distance pass of an SSSP query); ``unpin_after=True`` releases
+        a level's leases right after the consumer finishes with it
+        (the reconstruction pass).  With prefetching, the next level's
+        blocks stay in flight on the background thread; the in-flight
+        future is always drained — ``fut.result()`` re-raises loader
+        exceptions in the querying thread, and the ``finally`` below
+        collects the pending future when the consumer abandons the
+        sweep, so a failed prefetch read can never be silently lost.
+        """
         n = self.store.n_real(name)
+        read = lambda lvl: self.store.read_level(name, lvl, pin=pin)
         if self._pool is None or n <= 1:
             for lvl in range(n):
-                yield self.store.read_level(name, lvl)
+                yield read(lvl)
+                if unpin_after:
+                    self.store.unpin_level(name, lvl)
             return
-        fut = self._pool.submit(self.store.read_level, name, 0)
-        for lvl in range(n):
-            slab = fut.result()
-            if lvl + 1 < n:
-                fut = self._pool.submit(self.store.read_level, name,
-                                        lvl + 1)
-            yield slab
+        fut = self._pool.submit(read, 0)
+        try:
+            for lvl in range(n):
+                slab = fut.result()
+                fut = (self._pool.submit(read, lvl + 1)
+                       if lvl + 1 < n else None)
+                yield slab
+                if unpin_after:
+                    self.store.unpin_level(name, lvl)
+        finally:
+            # Consumer may abandon the generator mid-sweep (its own
+            # exception, or a failed fut.result() above): collect the
+            # in-flight future so its error/fd use is not left dangling.
+            if fut is not None and not fut.cancel():
+                try:
+                    fut.exception()
+                except concurrent.futures.CancelledError:
+                    pass
 
-    def _sweep(self, state: jnp.ndarray, name: str, step) -> jnp.ndarray:
-        return self._run_plan_stream(state, self._levels(name), step)
+    def _sweep(self, state: jnp.ndarray, name: str, step,
+               pin: bool = False) -> jnp.ndarray:
+        return self._run_plan_stream(state, self._levels(name, pin=pin),
+                                     step)
 
     def _init_dist(self, sources_perm: np.ndarray) -> jnp.ndarray:
         s = sources_perm.shape[0]
@@ -100,9 +144,10 @@ class StreamingQueryEngine(QueryEngine):
         dist = dist.at[jnp.arange(s), jnp.asarray(sources_perm)].set(0.0)
         return sl.shard(dist, "batch", None)
 
-    def _ssd_stream(self, sources_perm: np.ndarray) -> jnp.ndarray:
+    def _ssd_stream(self, sources_perm: np.ndarray,
+                    pin: bool = False) -> jnp.ndarray:
         dist = self._init_dist(sources_perm)
-        dist = self._sweep(dist, "plan_f", self._relax_step)
+        dist = self._sweep(dist, "plan_f", self._relax_step, pin=pin)
         if self.index.n_core:
             if self.core_mode == "dijkstra":
                 # Paper-faithful host heap over the resident core CSR —
@@ -111,7 +156,13 @@ class StreamingQueryEngine(QueryEngine):
                 dist = jnp.asarray(self._core_dijkstra_host(np.array(dist)))
             else:
                 dist = self._core_jit(dist)
-        return self._sweep(dist, "plan_b", self._relax_step)
+        return self._sweep(dist, "plan_b", self._relax_step, pin=pin)
+
+    def _unpin_plan(self, name: str) -> None:
+        """Release every pin lease a distance sweep may still hold on
+        one plan's levels (idempotent; sticky segment pins unaffected)."""
+        for lvl in range(self.store.n_real(name)):
+            self.store.unpin_level(name, lvl)
 
     # ---------------------------------------------------------------- public
     def ssd(self, sources: np.ndarray) -> np.ndarray:
@@ -121,12 +172,23 @@ class StreamingQueryEngine(QueryEngine):
 
     def sssp(self, sources: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         sources = np.asarray(sources, dtype=np.int32)
-        dist = self._ssd_stream(self.index.perm[sources])
-        pred = jnp.full((dist.shape[0], self.index.n_pad), -1, jnp.int32)
-        for name in ("plan_f", "plan_core", "plan_b"):
-            pred = self._run_plan_stream(
-                pred, self._levels(name),
-                lambda p, *slab: self._recon_step(p, dist, *slab))
+        try:
+            # Distance pass pins the levels it streams: reconstruction
+            # re-reads all of them immediately after (recon reuse).
+            dist = self._ssd_stream(self.index.perm[sources], pin=True)
+            pred = jnp.full((dist.shape[0], self.index.n_pad), -1,
+                            jnp.int32)
+            # Reverse plan order for cache affinity: plan_b was streamed
+            # moments ago, plan_f a whole sweep ago (the pinned one).
+            # The per-plan scatter-maxes commute, so pred is
+            # bit-identical to the in-memory f -> core -> b order.
+            for name in ("plan_b", "plan_core", "plan_f"):
+                pred = self._run_plan_stream(
+                    pred, self._levels(name, unpin_after=True),
+                    lambda p, *slab: self._recon_step(p, dist, *slab))
+        finally:
+            for name in ("plan_f", "plan_b"):
+                self._unpin_plan(name)
         dist = np.asarray(dist)[:, self.index.perm]
         pred = np.asarray(pred)[:, self.index.perm]
         return dist, pred

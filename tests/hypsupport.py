@@ -1,0 +1,102 @@
+"""Property-test support: real ``hypothesis`` when installed, a small
+deterministic fallback runner otherwise.
+
+CI installs the dev extra, so properties there get real hypothesis —
+full generation breadth, shrinking, and the deadline machinery.  In
+environments without it (the perpetual "1 skipped" this replaces), the
+fallback runs each property over a reduced, seeded sample of examples:
+no shrinking, but the invariants are still exercised on every run
+instead of being skipped wholesale.
+
+Only the subset of the hypothesis API the suite uses is mirrored:
+``given`` (positional strategies mapped to the trailing parameters, so
+pytest fixtures keep working), ``settings(max_examples=, deadline=)``,
+and ``strategies.integers/booleans/lists/composite``.
+"""
+from __future__ import annotations
+
+try:                                    # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    #: fallback cap: properties declare CI-sized max_examples; without
+    #: the real engine a reduced deterministic sample keeps tier-1 fast.
+    FALLBACK_MAX_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: "random.Random"):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def sample(rng):
+                    draw = lambda s: s.example(rng)
+                    return fn(draw, *args, **kwargs)
+                return _Strategy(sample)
+            return build
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_ignored):
+        """Record the example budget; deadline/health checks are the
+        real engine's concern and are accepted-and-ignored here."""
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        """Map strategies onto the trailing positional parameters (the
+        hypothesis convention), leaving leading pytest fixtures alone."""
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            n_fix = len(names) - len(strategies)
+            fixture_params = list(sig.parameters.values())[:n_fix]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # pytest passes fixtures by keyword; bind any positional
+                # args to names too, then fill the trailing (strategy)
+                # parameters with drawn values.
+                bound = dict(zip(names, args))
+                bound.update(kwargs)
+                declared = getattr(wrapper, "_hyp_max_examples",
+                                   getattr(fn, "_hyp_max_examples", 10))
+                n = min(declared, FALLBACK_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for _ in range(n):
+                    for name, strat in zip(names[n_fix:], strategies):
+                        bound[name] = strat.example(rng)
+                    fn(**bound)
+
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            return wrapper
+        return deco

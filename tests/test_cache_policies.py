@@ -1,0 +1,423 @@
+"""Trace-driven page-cache policy conformance (DESIGN.md §6).
+
+A pure-python reference model re-implements the documented state
+machines of all four ``PageCache`` policies — LRU, CLOCK, and the
+scan-resistant ARC/2Q (window + warm-fill + ghost-gated admission) —
+with plain lists.  Randomized and adversarial (cyclic-scan) block
+traces are replayed through both the production cache and the model,
+asserting hit/miss/eviction counters, resident bytes, and the resident
+key set match *exactly* after every access.  A hypothesis property
+(real engine in CI, deterministic fallback otherwise — see
+``hypsupport``) extends the same check to arbitrary traces and
+budgets.
+
+The policy-behavior tests at the bottom lock in the tentpole's win:
+on a pure cyclic scan larger than the budget, LRU/CLOCK retain nothing
+(the documented 0% baseline) while ARC/2Q keep a frozen prefix
+resident — plus the pinning protocol's guarantees.
+"""
+import numpy as np
+import pytest
+
+from hypsupport import given, settings, st
+
+from repro.storage import PageCache
+from repro.storage.pagecache import POLICIES
+
+BS = 64     # nominal block size for trace generators
+
+
+# ----------------------------------------------------------- reference model
+class RefCache:
+    """Independent reference implementation of the PageCache policies.
+
+    Plain lists, index 0 evicts first; no locks, no loader plumbing —
+    just the documented state machines (module docstring of
+    ``repro/storage/pagecache.py``).
+    """
+
+    WINDOW_FRAC = 0.125
+
+    def __init__(self, capacity, policy):
+        assert policy in POLICIES
+        self.cap = capacity
+        self.policy = policy
+        self.hits = self.misses = self.evictions = 0
+        self.entries = []           # lru/clock: [key, size, ref]
+        self.win, self.t1, self.t2 = [], [], []     # arc/2q: [key, size]
+        self.b1, self.b2 = [], []                   # ghosts: [key, size]
+        self.p = 0.0
+
+    # -- bookkeeping helpers
+    @staticmethod
+    def _bytes(lst):
+        return sum(e[1] for e in lst)
+
+    def resident_bytes(self):
+        if self.policy in ("lru", "clock"):
+            return self._bytes(self.entries)
+        return (self._bytes(self.win) + self._bytes(self.t1)
+                + self._bytes(self.t2))
+
+    def resident_keys(self):
+        if self.policy in ("lru", "clock"):
+            return [e[0] for e in self.entries]
+        return [e[0] for e in self.win + self.t1 + self.t2]
+
+    def _win_cap(self):
+        return max(1, int(self.cap * self.WINDOW_FRAC))
+
+    def _find(self, lst, key):
+        for i, e in enumerate(lst):
+            if e[0] == key:
+                return i
+        return None
+
+    def _unghost(self, key):
+        for lst in (self.b1, self.b2):
+            i = self._find(lst, key)
+            if i is not None:
+                del lst[i]
+
+    def _ghost(self, lst, key, size):
+        self._unghost(key)
+        lst.append([key, size])
+
+    def _trim_ghosts(self):
+        if self.cap is None:
+            return
+        while self._bytes(self.b1) > self.cap:
+            self.b1.pop(0)
+        while self._bytes(self.b2) > self.cap:
+            self.b2.pop(0)
+
+    # -- evictions
+    def _evict_window(self, keep):
+        for i, (k, s) in enumerate(self.win):
+            if k != keep:
+                del self.win[i]
+                self._ghost(self.b1, k, s)
+                self.evictions += 1
+                return True
+        return False
+
+    def _evict_main_one(self):
+        if self.policy == "arc" and self.t1 \
+                and (self._bytes(self.t1) > self.p or not self.t2):
+            k, s = self.t1.pop(0)
+            self._ghost(self.b1, k, s)
+        elif self.t2:
+            k, s = self.t2.pop(0)
+            if self.policy == "arc":
+                self._ghost(self.b2, k, s)
+        elif self.t1:
+            k, s = self.t1.pop(0)
+            self._ghost(self.b1, k, s)
+        else:
+            return False
+        self.evictions += 1
+        return True
+
+    def _shrink_main(self, keep):
+        if self.cap is None:
+            return
+        while self.resident_bytes() > self.cap:
+            if self._evict_main_one():
+                continue
+            if not self._evict_window(keep):
+                break
+
+    def _shrink_window(self, keep):
+        if self.cap is None:
+            return
+        wc = self._win_cap()
+        while (self._bytes(self.win) > wc
+               or self.resident_bytes() > self.cap) and len(self.win) > 1:
+            if not self._evict_window(keep):
+                break
+        while self.resident_bytes() > self.cap:
+            if not self._evict_main_one():
+                break
+
+    def _main_has_room(self, size):
+        if self.cap is None:
+            return True
+        main = self._bytes(self.t1) + self._bytes(self.t2)
+        reserved = max(self._win_cap(), self._bytes(self.win))
+        return main + size <= self.cap - reserved
+
+    # -- legacy (lru/clock) eviction
+    def _evict_legacy(self, keep):
+        if self.policy == "lru":
+            for i, e in enumerate(self.entries):
+                if e[0] != keep:
+                    del self.entries[i]
+                    self.evictions += 1
+                    return
+            return
+        for _pass in range(2):          # CLOCK: second chance
+            victim = None
+            for k in [e[0] for e in self.entries]:      # pass snapshot
+                i = self._find(self.entries, k)
+                if k == keep:
+                    continue
+                if self.entries[i][2]:
+                    self.entries[i][2] = False          # spare once
+                    self.entries.append(self.entries.pop(i))
+                else:
+                    victim = i
+                    break
+            if victim is not None:
+                del self.entries[victim]
+                self.evictions += 1
+                return
+
+    # -- the access path
+    def access(self, key, size):
+        """One block fetch; returns True on a hit."""
+        if self.policy in ("lru", "clock"):
+            i = self._find(self.entries, key)
+            if i is not None:
+                self.hits += 1
+                if self.policy == "lru":
+                    self.entries.append(self.entries.pop(i))
+                else:
+                    self.entries[i][2] = True
+                return True
+            self.misses += 1
+            if self.cap == 0 or (self.cap is not None and size > self.cap):
+                return False
+            self.entries.append([key, size, False])
+            if self.cap is not None:
+                while self.resident_bytes() > self.cap:
+                    before = self.resident_bytes()
+                    self._evict_legacy(keep=key)
+                    if self.resident_bytes() == before:
+                        break
+            return False
+        # arc / 2q
+        i = self._find(self.win, key)
+        if i is not None:
+            self.hits += 1
+            if self.policy == "arc":    # refresh recency; 2Q: FIFO stays
+                self.win.append(self.win.pop(i))
+            return True
+        i = self._find(self.t1, key)
+        if i is not None:               # ARC: T1 hit promotes to T2
+            self.hits += 1
+            self.t2.append(self.t1.pop(i))
+            return True
+        i = self._find(self.t2, key)
+        if i is not None:
+            self.hits += 1
+            self.t2.append(self.t2.pop(i))
+            return True
+        self.misses += 1
+        if self.cap == 0 or (self.cap is not None and size > self.cap):
+            return False
+        in_b1 = self._find(self.b1, key) is not None
+        in_b2 = self._find(self.b2, key) is not None
+        if in_b1 or (self.policy == "arc" and in_b2):
+            if self.policy == "arc":
+                if in_b1:
+                    if self.cap is not None:
+                        self.p = min(float(self.cap), self.p + size)
+                else:
+                    self.p = max(0.0, self.p - size)
+            self._unghost(key)
+            self.t2.append([key, size])
+            self._shrink_main(keep=key)
+        elif self._main_has_room(size):
+            if self.policy == "arc":
+                self.t1.append([key, size])     # ARC warm fill -> T1
+            else:
+                self.t2.append([key, size])     # 2Q warm fill -> Am
+        else:
+            self.win.append([key, size])
+            self._shrink_window(keep=key)
+        self._trim_ghosts()
+        return False
+
+
+# ------------------------------------------------------------ trace replay
+def replay_and_compare(policy, capacity, trace):
+    """Replay ``trace`` = [(key, size), ...] through PageCache and
+    RefCache, asserting exact agreement after every access."""
+    cache = PageCache(capacity, policy=policy)
+    ref = RefCache(capacity, policy)
+    for step, (key, size) in enumerate(trace):
+        loaded = []
+        data = cache.get(key, lambda: loaded.append(1) or b"\0" * size)
+        impl_hit = not loaded
+        ref_hit = ref.access(key, size)
+        ctx = (policy, capacity, step, key)
+        assert len(data) == size, ctx
+        assert impl_hit == ref_hit, f"hit divergence at {ctx}"
+        assert cache.stats.hits == ref.hits, ctx
+        assert cache.stats.misses == ref.misses, ctx
+        assert cache.stats.evictions == ref.evictions, ctx
+        assert cache.resident_bytes == ref.resident_bytes(), ctx
+        assert sorted(map(str, cache.resident_keys())) \
+            == sorted(map(str, ref.resident_keys())), ctx
+        if capacity is not None:
+            assert cache.resident_bytes <= capacity, ctx
+    return cache, ref
+
+
+def cyclic_trace(n_blocks, passes=2, size=BS):
+    return [(k, size) for _ in range(passes) for k in range(n_blocks)]
+
+
+def boundary_trace(n_blocks, passes=2, size=BS):
+    """Affinity-layout style: 3-block levels sharing boundary blocks
+    (… b,b+1,b+2 | b+2,b+3,b+4 | …), cycled ``passes`` times."""
+    one = []
+    b = 0
+    while b < n_blocks - 2:
+        one += [(b, size), (b + 1, size), (b + 2, size)]
+        b += 2
+    return one * passes
+
+
+BUDGET_GRID = (0, 5 * BS, 10 * BS, 1000 * BS, None)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("capacity", BUDGET_GRID)
+def test_conformance_cyclic_and_boundary_traces(policy, capacity):
+    replay_and_compare(policy, capacity, cyclic_trace(40, passes=3))
+    replay_and_compare(policy, capacity, boundary_trace(40, passes=3))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_conformance_randomized_traces(policy, seed):
+    rng = np.random.default_rng(seed)
+    size_of = rng.integers(1, 3 * BS, size=24)   # fixed size per block id
+    keys = rng.integers(0, 24, size=400)
+    trace = [(int(k), int(size_of[k])) for k in keys]
+    for capacity in (7 * BS, 30 * BS, None):
+        replay_and_compare(policy, capacity, trace)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_conformance_skewed_trace(policy):
+    """Zipf-ish mix: a hot set re-referenced inside long scans — the
+    regime where ghost admission and ARC's adaptation actually fire."""
+    rng = np.random.default_rng(7)
+    trace = []
+    for i in range(600):
+        if rng.random() < 0.3:
+            trace.append((int(rng.integers(0, 4)), BS))        # hot
+        else:
+            trace.append((100 + i % 50, BS))                   # scan
+    replay_and_compare(policy, 8 * BS, trace)
+
+
+# The property: arbitrary traces and budgets never diverge from the
+# model (and never overshoot the byte budget).  Slow under the real
+# engine only in generation breadth; deadline=None marks it exempt
+# from the per-example deadline.
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 14), min_size=0, max_size=120),
+       st.integers(0, 40),
+       st.integers(0, 3))
+def test_property_conformance_arbitrary_traces(keys, cap_blocks, pol_idx):
+    policy = POLICIES[pol_idx]
+    capacity = cap_blocks * BS if cap_blocks else 0
+    # deterministic per-key sizes (not all equal: exercises byte logic)
+    trace = [(k, BS + 7 * (k % 5)) for k in keys]
+    replay_and_compare(policy, capacity, trace)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=0, max_size=80),
+       st.integers(0, 3))
+def test_property_conformance_unbounded_budget(keys, pol_idx):
+    trace = [(k, BS) for k in keys]
+    cache, ref = replay_and_compare(POLICIES[pol_idx], None, trace)
+    # unbounded: every distinct key stays resident, nothing ever evicts
+    assert cache.stats.evictions == 0
+    assert sorted(set(k for k, _ in trace)) \
+        == sorted(set(cache.resident_keys()))
+
+
+# --------------------------------------------------- policy behavior locks
+def hit_rate_per_pass(policy, capacity, trace_pass, passes=3):
+    """Replay one pass repeatedly; per-pass hit rates (stats reset
+    between passes, residency kept)."""
+    cache = PageCache(capacity, policy=policy)
+    rates = []
+    for _ in range(passes):
+        cache.reset_stats()
+        for key, size in trace_pass:
+            cache.get(key, lambda: b"\0" * size)
+        rates.append(cache.stats.hit_rate())
+    return rates
+
+
+def test_cyclic_scan_lru_clock_baseline_is_zero():
+    """The documented baseline: a cyclic scan 4x the budget leaves
+    LRU/CLOCK with a 0.0 hit rate on every pass — each block is evicted
+    moments before its re-read (PR-3's BENCH_serve rows)."""
+    one_pass = cyclic_trace(40, passes=1)
+    for policy in ("lru", "clock"):
+        assert hit_rate_per_pass(policy, 10 * BS, one_pass) \
+            == [0.0, 0.0, 0.0]
+
+
+def test_cyclic_scan_arc_2q_retain_frozen_prefix():
+    """Scan resistance: after the cold pass, ARC/2Q re-hit their frozen
+    warm-fill prefix on every subsequent cyclic pass."""
+    one_pass = cyclic_trace(40, passes=1)
+    for policy in ("arc", "2q"):
+        rates = hit_rate_per_pass(policy, 10 * BS, one_pass)
+        assert rates[0] == 0.0                      # cold fill
+        assert rates[1] > 0.15, (policy, rates)     # ~budget - window
+        assert rates[2] >= rates[1] - 1e-9, (policy, rates)  # stable
+
+
+def test_pinned_blocks_survive_adversarial_scan():
+    for policy in POLICIES:
+        cache = PageCache(10 * BS, policy=policy)
+        cache.get("pinme", lambda: b"\0" * BS, pin=True)
+        assert "pinme" in cache.pinned_keys()
+        for key, size in cyclic_trace(100, passes=2):
+            cache.get(key, lambda: b"\0" * size)
+        # still answered from memory, never evicted
+        loaded = []
+        cache.get("pinme", lambda: loaded.append(1) or b"\0" * BS)
+        assert not loaded, policy
+        assert cache.resident_bytes <= 10 * BS
+
+
+def test_pin_budget_caps_pinning_and_degrades_gracefully():
+    cache = PageCache(10 * BS, policy="2q")
+    for i in range(10):                 # pin cap = PIN_FRAC (50%) = 5 blocks
+        cache.get(("p", i), lambda: b"\0" * BS, pin=True)
+    assert cache.pinned_bytes <= int(10 * BS * PageCache.PIN_FRAC)
+    assert len(cache.pinned_keys()) == 5
+    # the overflow blocks were still cached (normal admission)
+    assert cache.resident_bytes > cache.pinned_bytes
+
+
+def test_unpin_releases_back_to_policy_and_is_idempotent():
+    for policy in POLICIES:
+        cache = PageCache(10 * BS, policy=policy)
+        cache.get("a", lambda: b"\0" * BS, pin=True)
+        cache.unpin(["a", "never-seen"])        # unknown keys ignored
+        assert cache.pinned_keys() == []
+        assert "a" in cache.resident_keys()     # back in the main region
+        cache.unpin(["a"])                      # idempotent
+        # now evictable again: a big adversarial scan pushes it out
+        for key, size in cyclic_trace(60, passes=2):
+            cache.get(key, lambda: b"\0" * size)
+        assert cache.resident_bytes <= 10 * BS
+
+
+def test_pin_via_existing_resident_block():
+    cache = PageCache(10 * BS, policy="arc")
+    cache.get("a", lambda: b"\0" * BS)
+    assert cache.pin("a") is True
+    assert cache.pin("missing") is False
+    assert "a" in cache.pinned_keys()

@@ -1,14 +1,15 @@
 """Property-based HoD correctness (random graphs vs the Dijkstra oracle).
 
-Kept separate from test_hod_correctness.py so environments without
-``hypothesis`` (declared in the ``dev`` extra) skip these instead of
-failing collection for the whole suite.
+Runs under real ``hypothesis`` when installed (the CI/dev-extra path:
+full generation breadth + shrinking) and under the deterministic
+fallback runner in ``tests/hypsupport.py`` otherwise — the properties
+execute either way instead of skipping.  The ``deadline=None``
+settings mark the slow properties: each example builds an index and
+jit-compiles, far beyond hypothesis's default per-example deadline.
 """
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypsupport import given, settings, st
 
 from repro.core import (BuildConfig, QueryEngine, build_hod,  # noqa: E402
                         dijkstra_reference, from_edges)

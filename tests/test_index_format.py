@@ -3,8 +3,9 @@
 v2+ files persist the static-shape sweep plans (DESIGN.md §5); v1 files
 (chunk arrays only) must still load — rebuilding the plans on the fly
 with a warning — and answer identical queries.  v3 marks the store
-generation (same ``.npz`` keys; the disk-resident block store lives in
-`repro.storage` and is covered by tests/test_storage.py).
+generation, v4 the affinity segment layout (same ``.npz`` keys both
+times; the disk-resident block store lives in `repro.storage` and is
+covered by tests/test_storage.py).
 """
 import numpy as np
 import pytest
@@ -37,7 +38,7 @@ def test_saved_file_is_stamped_current_version(packed, tmp_path):
     path = str(tmp_path / "ix.npz")
     ix.save(path)
     with np.load(path) as z:
-        assert int(z["format_version"]) == FORMAT_VERSION == 3
+        assert int(z["format_version"]) == FORMAT_VERSION == 4
         for pre in ("pf", "pb", "pc"):
             for part in ("dst", "src", "w", "assoc", "valid", "mask"):
                 assert f"{pre}_{part}" in z.files
@@ -84,22 +85,25 @@ def test_legacy_v1_file_loads_with_warning_and_rebuilds(packed, tmp_path):
         HoDIndex.load(path)
 
 
-def test_v2_file_still_loads_without_warning(packed, tmp_path):
-    """A v2 file (plans serialized, pre-store stamp) loads silently and
-    keeps its plans — the store generation only added formats."""
+@pytest.mark.parametrize("version", [2, 3])
+def test_older_plan_file_still_loads_without_warning(packed, tmp_path,
+                                                     version):
+    """v2/v3 files (plans serialized, pre-affinity stamps) load silently
+    and keep their plans — the store and affinity generations only
+    added formats."""
     _, ix = packed
     path = str(tmp_path / "ix.npz")
-    v2 = str(tmp_path / "ix_v2.npz")
+    old = str(tmp_path / f"ix_v{version}.npz")
     ix.save(path)
     with np.load(path) as z:
         data = {k: z[k] for k in z.files if k != "format_version"}
-    np.savez_compressed(v2, format_version=np.int64(2), **data)
+    np.savez_compressed(old, format_version=np.int64(version), **data)
 
     import warnings as _w
     with _w.catch_warnings():
         _w.simplefilter("error")
-        ix2 = HoDIndex.load(v2)
-    assert ix2.format_version == 2
+        ix2 = HoDIndex.load(old)
+    assert ix2.format_version == version
     np.testing.assert_array_equal(ix.plan_f.w, ix2.plan_f.w)
     src = np.array([0, 64], dtype=np.int32)
     np.testing.assert_array_equal(QueryEngine(ix).ssd(src),

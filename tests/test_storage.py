@@ -114,7 +114,7 @@ def test_pagecache_zero_capacity_disables_caching():
 def test_store_roundtrip_bitexact(packed, store_dir):
     _, ix = packed
     ix2 = HoDIndex.load(store_dir)            # dir -> load_store delegation
-    assert ix2.format_version == FORMAT_VERSION == 3
+    assert ix2.format_version == FORMAT_VERSION == 4
     np.testing.assert_array_equal(ix.perm, ix2.perm)
     np.testing.assert_array_equal(ix.f_w, ix2.f_w)
     np.testing.assert_array_equal(ix.core_closure, ix2.core_closure)
@@ -305,6 +305,237 @@ def test_npz_load_closes_handle_and_accepts_mmap_mode(packed, tmp_path):
     os.unlink(path)
 
 
+# ------------------------------------------------- scan-resistant caching
+class _RecordingCache(PageCache):
+    """Unbounded cache that records the block access trace (key, size)."""
+
+    def __init__(self):
+        super().__init__(None)
+        self.trace = []
+
+    def get(self, key, load, pin=False):
+        loaded = []
+        data = super().get(key, lambda: loaded.append(1) or load(),
+                           pin=pin)
+        self.trace.append((key, len(data)))
+        return data
+
+
+def _sweep_trace(store_dir):
+    """The block trace of one full SSD sweep (forward + backward)."""
+    rec = _RecordingCache()
+    seng = StreamingQueryEngine(IndexStore(store_dir, cache=rec),
+                                prefetch=False)
+    try:
+        seng.ssd(np.array([0], dtype=np.int32))
+    finally:
+        seng.close()
+    return rec.trace
+
+
+def _replay(policy, budget, trace):
+    cache = PageCache(budget, policy=policy)
+    for pass_rates in range(2):
+        for key, size in trace:
+            cache.get(key, lambda: b"\0" * size)
+    return cache.stats.hit_rate()
+
+
+def test_cyclic_sweep_regression_at_25pct_budget(packed, store_dir):
+    """The tentpole's win, locked in by tier-1: one full sweep's block
+    trace replayed twice at a 25% budget.
+
+    * On the *deduplicated* trace (one access per distinct block — the
+      PR-3 block-aligned layout's access pattern) LRU and CLOCK hit 0%:
+      the classic cyclic-scan thrash the BENCH_serve rows documented.
+      The scan-resistant ARC/2Q retain a frozen prefix and re-hit it.
+    * On the real v4 affinity trace (adjacent levels share boundary
+      blocks) every policy gets the intra-sweep hits, and ARC/2Q add
+      cross-sweep retention on top of LRU.
+    """
+    from repro.storage import segment_bytes
+    trace = _sweep_trace(store_dir)
+    assert len(trace) > len(set(k for k, _ in trace)), \
+        "affinity layout should make adjacent levels share blocks"
+    budget = int(0.25 * segment_bytes(store_dir))
+
+    # deduplicated trace = pure cyclic scan (the legacy access pattern)
+    seen, pure = set(), []
+    for key, size in trace:
+        if key not in seen:
+            seen.add(key)
+            pure.append((key, size))
+    assert _replay("lru", budget, pure) == 0.0      # documented baseline
+    assert _replay("clock", budget, pure) == 0.0
+    for policy in ("arc", "2q"):
+        assert _replay(policy, budget, pure) > 0.0, policy
+
+    # real affinity trace: scan-resistant policies beat LRU
+    lru_rate = _replay("lru", budget, trace)
+    for policy in ("arc", "2q"):
+        rate = _replay(policy, budget, trace)
+        assert rate > 0.0 and rate >= lru_rate, (policy, rate, lru_rate)
+
+
+def test_affinity_layout_shrinks_segments(packed, tmp_path):
+    """v4 compact slabs must strictly undercut the padded-rectangle
+    envelope whenever a plan has padding rows (every real graph)."""
+    _, ix = packed
+    path = str(tmp_path / "store")
+    ix.save_store(path, block_bytes=1024)
+    shrank = False
+    for name in PLANS:
+        plan = getattr(ix, name)
+        real_rows = int(plan.row_valid.sum())
+        slots = plan.n_real_levels * plan.m_pad
+        padded = slots * (4 + plan.k_fix * 12)
+        seg = os.path.getsize(os.path.join(path, f"{name}.seg"))
+        # header/footer overhead is ~2 blocks; only plans with a real
+        # padding envelope must strictly undercut the rectangle
+        if slots and real_rows < 0.8 * slots:
+            assert seg < padded, (name, seg, padded)
+            shrank = True
+    assert shrank, "no plan exercised the compact layout"
+
+
+def test_plan_core_segment_is_pinned_resident(packed, store_dir):
+    """Segment-aware admission: plan_core blocks are pinned on first
+    read, so a full plan_f scan can never evict them."""
+    from repro.storage import segment_bytes
+    budget = int(0.25 * segment_bytes(store_dir))
+    store = IndexStore(store_dir, cache=PageCache(budget, policy="2q"))
+    try:
+        for lvl in range(store.n_real("plan_core")):
+            store.read_level("plan_core", lvl)
+        pinned = set(store.cache.pinned_keys())
+        assert pinned, "plan_core blocks were not pinned"
+        for _ in range(2):                      # two adversarial scans
+            for lvl in range(store.n_real("plan_f")):
+                store.read_level("plan_f", lvl)
+        assert pinned <= set(store.cache.pinned_keys())
+        # re-reading plan_core causes zero new misses
+        before = store.cache.stats.misses
+        for lvl in range(store.n_real("plan_core")):
+            store.read_level("plan_core", lvl)
+        assert store.cache.stats.misses == before
+    finally:
+        store.close()
+
+
+def test_sssp_recon_pins_are_released(packed, store_dir):
+    """The recon pin protocol must not leak leases: after an SSSP query
+    only the sticky plan_core pins remain."""
+    from repro.storage import segment_bytes
+    budget = int(0.25 * segment_bytes(store_dir))
+    store = IndexStore(store_dir, cache=PageCache(budget, policy="2q"))
+    seng = StreamingQueryEngine(store, prefetch=False)
+    try:
+        seng.sssp(np.array([0, 3], dtype=np.int32))
+        core_keys = set()
+        for lvl in range(store.n_real("plan_core")):
+            core_keys |= set(store.segments["plan_core"].level_keys(lvl))
+        leftover = set(store.cache.pinned_keys()) - core_keys
+        assert not leftover, f"leaked pin leases: {leftover}"
+    finally:
+        seng.close()
+
+
+# ------------------------------------------------------ fault propagation
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_corrupt_segment_read_raises_in_query_thread(packed, tmp_path,
+                                                     prefetch):
+    """A corrupt block must surface as an exception in the querying
+    thread — including when the read happens on the prefetch thread —
+    never as silent garbage distances."""
+    _, ix = packed
+    path = str(tmp_path / "store")
+    ix.save_store(path, block_bytes=1024)
+    seg = os.path.join(path, "plan_f.seg")
+    # flip bytes in the middle of a data block (past the header block)
+    with open(seg, "r+b") as f:
+        f.seek(2 * 1024 + 100)
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    seng = StreamingQueryEngine(IndexStore(path), prefetch=prefetch)
+    try:
+        with pytest.raises(ValueError, match="CRC mismatch"):
+            seng.ssd(np.array([0], dtype=np.int32))
+    finally:
+        seng.close()
+
+
+def test_abandoned_prefetch_future_is_drained(packed, store_dir):
+    """If the consumer abandons a sweep mid-stream, the in-flight
+    prefetch future is collected (no dangling read against a closed
+    fd, no swallowed exception)."""
+    seng = StreamingQueryEngine(IndexStore(store_dir), prefetch=True)
+    try:
+        gen = seng._levels("plan_f")
+        next(gen)                   # level 0 consumed, level 1 in flight
+        gen.close()                 # abandon: finally must drain cleanly
+    finally:
+        seng.close()
+
+
+# ------------------------------------------------------- v3 segment compat
+def _forge_v3_segment(path, plan, sentinel, block_bytes):
+    """Replicate the PR-3 (v3) block-aligned segment writer."""
+    import json as _json
+    import struct as _struct
+    header_s = _struct.Struct("<8sIIIIIIIIQQ")
+    m_pad, k_fix = plan.m_pad, plan.k_fix
+    n_real = plan.n_real_levels
+    payload = m_pad * (4 + 1) + m_pad * k_fix * (4 + 4 + 4)
+    bpl = max(1, -(-payload // block_bytes))
+    footer = _json.dumps({
+        "extents": [[1 + lv * bpl, bpl, payload] for lv in range(n_real)],
+        "n_real": n_real,
+    }).encode()
+    footer_off = block_bytes * (1 + n_real * bpl)
+    header = header_s.pack(b"HODSEG03", 3, block_bytes, n_real,
+                           plan.l_pad, m_pad, k_fix, sentinel, 0,
+                           footer_off, len(footer))
+    with open(path, "wb") as f:
+        f.write(header.ljust(block_bytes, b"\0"))
+        for lvl in range(n_real):
+            slab = b"".join((
+                np.ascontiguousarray(plan.dst[lvl], np.int32).tobytes(),
+                np.ascontiguousarray(plan.row_valid[lvl],
+                                     np.uint8).tobytes(),
+                np.ascontiguousarray(plan.src_idx[lvl],
+                                     np.int32).tobytes(),
+                np.ascontiguousarray(plan.w[lvl], np.float32).tobytes(),
+                np.ascontiguousarray(plan.assoc[lvl],
+                                     np.int32).tobytes()))
+            f.write(slab.ljust(bpl * block_bytes, b"\0"))
+        f.write(footer)
+
+
+def test_v3_block_aligned_segments_still_load(packed, tmp_path):
+    """A store written by the PR-3 layout (block-aligned full-M_pad
+    slabs, no CRCs) keeps loading bit-exactly through the v4 reader."""
+    _, ix = packed
+    path = str(tmp_path / "store")
+    ix.save_store(path, block_bytes=1024)
+    for name in PLANS:
+        _forge_v3_segment(os.path.join(path, f"{name}.seg"),
+                          getattr(ix, name), ix.n, 1024)
+    ix2 = HoDIndex.load(path)
+    for field in PLANS:
+        a, b = getattr(ix, field), getattr(ix2, field)
+        for part in ("dst", "src_idx", "w", "assoc", "row_valid",
+                     "level_mask"):
+            np.testing.assert_array_equal(getattr(a, part),
+                                          getattr(b, part))
+    sources = np.array([0, 7], dtype=np.int32)
+    seng = StreamingQueryEngine(IndexStore(path), prefetch=False)
+    try:
+        np.testing.assert_array_equal(QueryEngine(ix).ssd(sources),
+                                      seng.ssd(sources))
+    finally:
+        seng.close()
+
+
 # The hypothesis random-graph streaming-equivalence property lives in
-# tests/test_hod_property.py (the importorskip-guarded module), so this
-# module's coverage survives environments without the dev extra.
+# tests/test_hod_property.py (run everywhere via the hypsupport
+# fallback), the policy conformance harness in
+# tests/test_cache_policies.py.
