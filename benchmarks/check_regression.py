@@ -1,0 +1,142 @@
+"""CI bench-regression gate: fail the build when a fresh serve run
+regresses against the committed ``BENCH_serve.json`` baseline.
+
+Compared per row, matched on stable keys:
+
+* ``serve`` rows (key: ``batch``) — measured throughput must stay
+  within ``--throughput-tol`` (default −20%) of the baseline's
+  ``queries_per_s``;
+* ``store`` rows (key: ``codec, cache_frac, policy``) — the page-cache
+  ``hit_rate`` must stay within ``--hit-rate-tol`` (default −5pp,
+  *absolute*), and ``real_bytes`` (actual segment bytes read —
+  compressed bytes on codec stores) must not grow by more than
+  ``--bytes-tol`` (default +10%).
+
+Hit rate and bytes-read are deterministic for a fixed graph, layout,
+codec, and policy, so their tolerances only absorb intentional
+layout/codec drift — a thrashing cache or a codec that stopped
+shrinking reads fails loudly.  Throughput is machine-dependent: the
+default −20% suits same-machine comparisons; CI compares against a
+baseline committed from a different machine and passes a looser
+``--throughput-tol`` (see .github/workflows/ci.yml) so the gate
+catches collapses, not runner jitter.
+
+A baseline row with no matching fresh row is itself a violation
+(silently dropping a benchmark config cannot pass the gate); fresh
+rows absent from the baseline (e.g. a newly added codec) are ignored.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --baseline baseline.json --fresh BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+HIT_RATE_TOL = 0.05     # absolute percentage points
+THROUGHPUT_TOL = 0.20   # relative
+BYTES_TOL = 0.10        # relative
+
+
+def _store_key(row: dict) -> tuple:
+    return (row.get("codec", "raw"), row["cache_frac"], row["policy"])
+
+
+def compare(baseline: dict, fresh: dict,
+            hit_rate_tol: float = HIT_RATE_TOL,
+            throughput_tol: float = THROUGHPUT_TOL,
+            bytes_tol: float = BYTES_TOL,
+            check_throughput: bool = True) -> List[str]:
+    """Violation messages for ``fresh`` vs ``baseline`` (empty = pass).
+
+    Both arguments are ``BENCH_serve.json`` documents (the full
+    ``{"tables": {...}}`` schema or a bare tables dict).
+    """
+    base_t = baseline.get("tables", baseline)
+    fresh_t = fresh.get("tables", fresh)
+    out: List[str] = []
+
+    fresh_serve = {r["batch"]: r for r in fresh_t.get("serve", ())}
+    for row in base_t.get("serve", ()):
+        got = fresh_serve.get(row["batch"])
+        if got is None:
+            out.append(f"serve[batch={row['batch']}]: row missing "
+                       "from fresh run")
+            continue
+        if not check_throughput:
+            continue
+        floor = (1.0 - throughput_tol) * row["queries_per_s"]
+        if got["queries_per_s"] < floor:
+            out.append(
+                f"serve[batch={row['batch']}]: throughput "
+                f"{got['queries_per_s']:.0f} q/s < "
+                f"{floor:.0f} (baseline {row['queries_per_s']:.0f} "
+                f"- {throughput_tol:.0%})")
+
+    fresh_store = {_store_key(r): r for r in fresh_t.get("store", ())}
+    for row in base_t.get("store", ()):
+        key = _store_key(row)
+        name = (f"store[codec={key[0]}, cache={key[1]:.0%}, "
+                f"policy={key[2]}]")
+        got = fresh_store.get(key)
+        if got is None:
+            out.append(f"{name}: row missing from fresh run")
+            continue
+        floor = row["hit_rate"] - hit_rate_tol
+        if got["hit_rate"] < floor:
+            out.append(
+                f"{name}: hit rate {got['hit_rate']:.3f} < "
+                f"{floor:.3f} (baseline {row['hit_rate']:.3f} "
+                f"- {hit_rate_tol:.0%}pp)")
+        ceil = (1.0 + bytes_tol) * row["real_bytes"]
+        if got["real_bytes"] > max(ceil, row["real_bytes"]):
+            out.append(
+                f"{name}: bytes read {got['real_bytes']} > "
+                f"{ceil:.0f} (baseline {row['real_bytes']} "
+                f"+ {bytes_tol:.0%})")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail (exit 1) when a fresh BENCH_serve run "
+                    "regresses against the committed baseline")
+    ap.add_argument("--baseline", default="BENCH_serve.json",
+                    help="committed baseline BENCH_serve.json")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH_serve.json")
+    ap.add_argument("--hit-rate-tol", type=float, default=HIT_RATE_TOL,
+                    help="max absolute hit-rate drop (default 0.05)")
+    ap.add_argument("--throughput-tol", type=float,
+                    default=THROUGHPUT_TOL,
+                    help="max relative throughput drop (default 0.20)")
+    ap.add_argument("--bytes-tol", type=float, default=BYTES_TOL,
+                    help="max relative bytes-read growth (default 0.10)")
+    ap.add_argument("--no-throughput", action="store_true",
+                    help="skip the machine-dependent throughput check")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    violations = compare(baseline, fresh,
+                         hit_rate_tol=args.hit_rate_tol,
+                         throughput_tol=args.throughput_tol,
+                         bytes_tol=args.bytes_tol,
+                         check_throughput=not args.no_throughput)
+    if violations:
+        print(f"bench regression vs {args.baseline}:")
+        for v in violations:
+            print(f"  FAIL {v}")
+        return 1
+    base_sha = baseline.get("git_sha", "?")
+    print(f"bench-regression gate OK: {args.fresh} within tolerance of "
+          f"{args.baseline} (baseline sha {base_sha[:12]})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

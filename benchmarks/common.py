@@ -10,13 +10,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 import numpy as np
 
-from repro.core import (BuildConfig, QueryEngine, build_hod,
-                        gnm_random_digraph, grid_road_graph, pack_index,
-                        power_law_digraph, symmetrize)
+from repro.core import (BuildConfig, QueryEngine, gnm_random_digraph,
+                        grid_road_graph, pack_index, power_law_digraph,
+                        symmetrize)
 from repro.core.build_fast import build_hod_fast
 from repro.core.io_sim import BlockDevice
 

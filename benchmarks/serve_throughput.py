@@ -10,7 +10,11 @@ serving design (DESIGN.md §6–§7):
   the budget over {5%, 25%, 100%} of the segment bytes reproduces the
   paper's memory-constrained regime — the device then meters *actual*
   block reads (cache misses), so hit-rate and measured I/O seconds vary
-  with the budget instead of being a fixed synthetic charge.
+  with the budget instead of being a fixed synthetic charge.  The
+  ``codec`` column (format v5, DESIGN.md §6) re-runs the budget sweep
+  from ``delta``/``f16`` compressed stores at the same decompressed
+  cache budget: identical hit sequence, strictly fewer compressed
+  bytes read — the paper's on-disk-size currency, measured.
 
 Also reports the cold-start path the SweepPlan is for (DESIGN.md §5):
 index ``.npz`` load → engine construction → warm-start compile → first
@@ -46,6 +50,14 @@ COLD_BATCH = 16
 #: row at 25% keeps the PR-3 thrash baseline measurable next to it.
 STORE_CONFIGS = ((0.05, "2q"), (0.25, "lru"), (0.25, "arc"),
                  (0.25, "2q"), (1.0, "2q"))
+#: codec × budget grid (policy 2q).  Budgets are fractions of the RAW
+#: store's segment bytes for every codec, so each (frac, codec) cell
+#: holds the same number of decompressed blocks — the hit sequence is
+#: identical and the codec column isolates compressed bytes-read.
+STORE_CODECS = ("delta", "f16")
+CODEC_FRACS = (0.05, 0.25, 1.0)
+#: ISSUE-5 acceptance: delta segments must undercut raw by >= 30%.
+DELTA_MIN_SHRINK = 0.30
 STORE_BATCH = 16
 STORE_REQUESTS = 64
 
@@ -68,13 +80,30 @@ def cold_start_latency(ix) -> dict:
     return {"load_s": t_load, "warm_s": t_warm, "first_s": t_first}
 
 
+def _serve_store(store_dir: str, budget: int, policy: str,
+                 sources: np.ndarray, n: int):
+    server = QueryServer(store_path=store_dir, cache_bytes=budget,
+                         batch_size=STORE_BATCH, cache_entries=0,
+                         cache_policy=policy, warm_start=True)
+    try:
+        results = server.serve_stream(sources)
+    finally:
+        server.close()
+    assert all(np.isfinite(r.dist[:n]).all() for r in results)
+    return server
+
+
 def store_cache_sweep(ix, sources: np.ndarray) -> list:
     """Serve the same request stream from a block store under the
-    (page-cache budget, eviction policy) grid of ``STORE_CONFIGS``.
+    (page-cache budget, eviction policy) grid of ``STORE_CONFIGS``,
+    then under the codec × budget grid of ``STORE_CODECS``.
 
     The scan-resistant policies + the v4 affinity layout are what make
     the mid-budget rows meaningful: under PR-3's LRU + block-aligned
-    slabs the 5%/25% rows thrashed to a 0.0 hit rate."""
+    slabs the 5%/25% rows thrashed to a 0.0 hit rate.  The codec rows
+    (format v5) hold the decompressed cache budget fixed per fraction,
+    so ``real_bytes`` isolates what compression buys: compressed
+    bytes-read strictly below the raw row at every budget."""
     rows = []
     with tempfile.TemporaryDirectory() as tmp:
         store_dir = os.path.join(tmp, "store")
@@ -83,36 +112,58 @@ def store_cache_sweep(ix, sources: np.ndarray) -> list:
         print(f"\n-- store-backed serving: {seg_bytes/1e6:.2f} MB of "
               f"segments, {sources.shape[0]} requests, "
               f"batch={STORE_BATCH} --")
-        print(fmt_row(["cache", "policy", "hit rate", "real MB",
+        print(fmt_row(["codec", "cache", "policy", "hit rate", "real MB",
                        "modeled MB", "io ms", "queries/s"]))
-        for frac, policy in STORE_CONFIGS:
-            budget = int(frac * seg_bytes)
-            server = QueryServer(store_path=store_dir, cache_bytes=budget,
-                                 batch_size=STORE_BATCH, cache_entries=0,
-                                 cache_policy=policy, warm_start=True)
-            try:
-                results = server.serve_stream(sources)
-            finally:
-                server.close()
+
+        def one_row(codec, sdir, frac, policy):
+            budget = int(frac * seg_bytes)   # raw-store denominator
+            server = _serve_store(sdir, budget, policy, sources, ix.n)
             st = server.stats
             io = server.modeled_io()
             io_s = io.modeled_seconds(
                 block_bytes=server.device.block_bytes)
             modeled_mb = server.modeled_scan_bytes * st.batches / 1e6
             print(fmt_row([
-                f"{frac:.0%}", policy, f"{st.page_hit_rate():.1%}",
+                codec, f"{frac:.0%}", policy,
+                f"{st.page_hit_rate():.1%}",
                 f"{st.store_bytes_read/1e6:.2f}", f"{modeled_mb:.2f}",
                 f"{io_s*1e3:.1f}", f"{st.throughput():.0f}"]))
-            assert all(np.isfinite(r.dist[: ix.n]).all() for r in results)
             rows.append({
-                "cache_frac": frac, "policy": policy,
+                "codec": codec, "cache_frac": frac, "policy": policy,
                 "cache_bytes": budget,
+                "seg_bytes": segment_bytes(sdir),
                 "hit_rate": st.page_hit_rate(),
                 "real_bytes": st.store_bytes_read,
+                "filled_bytes": st.store_bytes_filled,
                 "modeled_bytes": server.modeled_scan_bytes * st.batches,
                 "io_seconds": io_s, "queries_per_s": st.throughput(),
                 "seq_blocks": io.seq_blocks, "rand_blocks": io.rand_blocks,
             })
+            return rows[-1]
+
+        raw_rows = {}
+        for frac, policy in STORE_CONFIGS:
+            row = one_row("raw", store_dir, frac, policy)
+            if policy == "2q":
+                raw_rows[frac] = row
+        for codec in STORE_CODECS:
+            cdir = os.path.join(tmp, f"store_{codec}")
+            ix.save_store(cdir, codec=codec)
+            cseg = segment_bytes(cdir)
+            if codec == "delta":
+                assert cseg <= (1 - DELTA_MIN_SHRINK) * seg_bytes, (
+                    f"delta segments {cseg} shrank segment bytes by "
+                    f"less than {DELTA_MIN_SHRINK:.0%} vs raw {seg_bytes}")
+            for frac in CODEC_FRACS:
+                row = one_row(codec, cdir, frac, "2q")
+                raw_read = raw_rows[frac]["real_bytes"]
+                # fully-resident budgets read nothing after warmup on
+                # either store; every partial budget must read strictly
+                # fewer compressed bytes than raw
+                assert (row["real_bytes"] < raw_read if raw_read
+                        else row["real_bytes"] == 0), (
+                    f"{codec}@{frac:.0%}: compressed bytes-read "
+                    f"{row['real_bytes']} not below raw {raw_read}")
     return rows
 
 

@@ -7,8 +7,6 @@ validate the projection against a measured number.
 import math
 import time
 
-import numpy as np
-
 from repro.core.closeness import estimate_closeness
 
 from .common import build_hod_cached, dataset_suite, fmt_row, time_hod_query
@@ -19,7 +17,6 @@ def run():
     print("\n== Table 5: closeness estimation, projected total (s) ==")
     print(fmt_row(["dataset", "k", "HoD(total)", "HoD(measured)",
                    "VC-Index(proj)"]))
-    from repro.core.baselines import VCIndex
     from .table3_index_size import vc_cached
     rows = []
     for name, g in dataset_suite(undirected=True).items():

@@ -1,1 +1,1 @@
-from .manager import CheckpointManager, save_pytree, load_pytree  # noqa: F401
+from .manager import CheckpointManager, load_pytree, save_pytree  # noqa: F401

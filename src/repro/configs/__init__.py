@@ -9,7 +9,7 @@ configs) + the paper's own graph configs.  Each module exposes
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 ARCH_IDS: List[str] = [
     "glm4-9b", "command-r-35b", "gemma3-12b", "granite-moe-1b-a400m",

@@ -1,12 +1,12 @@
 # The paper's primary contribution: Highways-on-Disk (HoD) — a rank-ordered
 # shortcut index whose SSD/SSSP queries are pure linear scans, implemented
 # here as batched level-synchronous JAX sweeps (see DESIGN.md).
-from .graph import (Digraph, from_edges, gnm_random_digraph,  # noqa: F401
-                    power_law_digraph, grid_road_graph, symmetrize,
-                    largest_weakly_connected_component)
 from .build import BuildConfig, BuildResult, BuildStats, build_hod  # noqa: F401
+from .closeness import ClosenessResult, estimate_closeness  # noqa: F401
+from .graph import (Digraph, from_edges, gnm_random_digraph,  # noqa: F401
+                    grid_road_graph, largest_weakly_connected_component,
+                    power_law_digraph, symmetrize)
 from .index import (HoDIndex, LevelBuckets, SweepPlan,  # noqa: F401
                     build_core_plan, build_sweep_plan, level_buckets,
                     pack_index)
 from .query import QueryEngine, dijkstra_reference  # noqa: F401
-from .closeness import estimate_closeness, ClosenessResult  # noqa: F401

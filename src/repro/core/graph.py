@@ -10,7 +10,7 @@ triplets during the sort-merge.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional, Tuple
+from typing import Iterable, Tuple
 
 import numpy as np
 

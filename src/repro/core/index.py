@@ -70,9 +70,13 @@ def core_scan_bytes(ix: "HoDIndex", core_mode: str) -> int:
 #: format; v4 = the affinity segment layout: level slabs stored
 #: compactly (padding rows trimmed) and packed back-to-back at byte
 #: granularity so co-accessed level runs share block neighborhoods,
-#: plus per-block CRCs (DESIGN.md §6).  v1/v2/v3 ``.npz`` files and v3
-#: ``.seg`` segment files keep loading.
-FORMAT_VERSION = 4
+#: plus per-block CRCs (DESIGN.md §6); v5 = compressed block segments:
+#: every data block is a ``(codec_id, comp_len, crc)`` frame encoded by
+#: a per-block codec (``raw`` / ``delta`` id compression / ``f16``
+#: weight narrowing — `repro.storage.codecs`), decompressed on page-
+#: cache fill.  v1–v4 ``.npz`` files and v3/v4 ``.seg`` segment files
+#: keep loading.
+FORMAT_VERSION = 5
 
 
 @dataclasses.dataclass
@@ -393,17 +397,20 @@ class HoDIndex:
             k_cap=np.int64(self.k_cap),
             **self.resident_arrays(), **plans)
 
-    def save_store(self, path: str, block_bytes: int = 65536) -> None:
-        """Write the disk-resident v3 block store (a directory): the
-        small resident tier plus one block segment file per sweep plan,
-        readable level-by-level without loading the whole index — see
-        `repro.storage.blockfile` and DESIGN.md §6."""
+    def save_store(self, path: str, block_bytes: int = 65536,
+                   codec: str = "raw") -> None:
+        """Write the disk-resident block store (a directory): the small
+        resident tier plus one block segment file per sweep plan,
+        readable level-by-level without loading the whole index.
+        ``codec`` picks the per-block compression (``"raw"`` /
+        ``"delta"`` / ``"f16"``) — see `repro.storage.blockfile`,
+        `repro.storage.codecs`, and DESIGN.md §6."""
         from ..storage.blockfile import save_store
-        save_store(self, path, block_bytes=block_bytes)
+        save_store(self, path, block_bytes=block_bytes, codec=codec)
 
     @staticmethod
     def load_store(path: str) -> "HoDIndex":
-        """Fully materialize a v3 store directory (plans bit-exact).
+        """Fully materialize a store directory (plans bit-exact).
         Serving should stream via ``repro.storage.IndexStore`` instead."""
         from ..storage.blockfile import load_store
         return load_store(path)

@@ -1,5 +1,5 @@
-from .lm import TokenStream  # noqa: F401
 from .graphs import (make_graph_batch, synth_feature_graph,  # noqa: F401
                      synth_molecule_batch)
-from .sampler import NeighborSampler  # noqa: F401
+from .lm import TokenStream  # noqa: F401
 from .recsys import RecsysStream  # noqa: F401
+from .sampler import NeighborSampler  # noqa: F401

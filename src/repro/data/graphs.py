@@ -7,10 +7,8 @@ SchNet/Equiformer configs run on every shape, per the frontend-stub rule.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from ..models.gnn.common import GraphBatch
 
@@ -87,7 +85,6 @@ def bucket_edges_by_dst(g: GraphBatch, n_buckets: int,
           if g.edge_feat is not None else None)
     if ef is not None and ef.ndim == 2 and ef.shape[1] == 3:
         ef[:, 2] = 1.0          # unit stub vectors for padding
-    pos = 0
     src_s, dst_s = src[order], dst[order]
     efe = np.asarray(g.edge_feat)[order] if g.edge_feat is not None else None
     start = 0

@@ -11,8 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence, Tuple
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from ..models.gnn.common import GraphBatch
 

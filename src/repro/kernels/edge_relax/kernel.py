@@ -14,8 +14,6 @@ block, no f32[S,M,K] intermediate ever hits HBM (the pure-jnp version
 materializes it).  Grid: (S/bs, M/bm); K is kept whole per block (bounded
 by the level's max in-degree bucket).
 """
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -26,7 +26,7 @@ import subprocess
 import sys
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 # TPU v5e constants (assigned)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -83,7 +83,6 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
     import jax
 
     from .. import shardlib as sl
-    from ..configs import get_arch
     from .mesh import make_production_mesh
     from .steps import build_cell, rules_for
 

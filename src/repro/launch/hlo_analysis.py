@@ -22,7 +22,6 @@ condition computation.  Conditionals take the max across branches.
 """
 from __future__ import annotations
 
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

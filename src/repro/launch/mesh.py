@@ -19,7 +19,7 @@ They differ by workload kind:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 

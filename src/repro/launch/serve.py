@@ -23,10 +23,14 @@ Two index residency modes (DESIGN.md §6):
   real-vs-modeled I/O plus the cache hit-rate land in ``batch_io``.
   ``cache_policy`` picks the eviction policy (``"2q"`` by default —
   the scan-resistant choice for cyclic sweeps; ``"arc"``, ``"lru"``,
-  ``"clock"`` also available, DESIGN.md §6).
+  ``"clock"`` also available, DESIGN.md §6).  ``--codec`` writes the
+  store with a per-block segment codec (``delta``/``f16``): misses
+  then read *compressed* bytes and decompress on cache fill, so
+  ``store_bytes_read`` < ``store_bytes_filled``.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 32
     PYTHONPATH=src python -m repro.launch.serve --store --cache-frac 0.05
+    PYTHONPATH=src python -m repro.launch.serve --store --codec delta
 """
 from __future__ import annotations
 
@@ -70,6 +74,9 @@ class ServerStats:
     page_hits: int = 0                  # store page-cache block hits
     page_misses: int = 0                # store page-cache block misses
     store_bytes_read: int = 0           # actual bytes read from segments
+    #: decompressed bytes the cache was filled with; exceeds
+    #: ``store_bytes_read`` on codec stores (decompress-on-fill)
+    store_bytes_filled: int = 0
 
     def throughput(self) -> float:
         return self.requests / self.busy_seconds if self.busy_seconds else 0.0
@@ -85,10 +92,12 @@ class BatchIO:
     ``page_hits / (page_hits + page_misses)`` is the batch's hit rate."""
 
     batch: int                          # stats.batches ordinal
-    real_bytes: int                     # actual segment bytes read (misses)
+    real_bytes: int                     # actual segment bytes read (misses;
+    #                                     compressed bytes on codec stores)
     modeled_bytes: int                  # compact-payload scan model
     page_hits: int = 0
     page_misses: int = 0
+    filled_bytes: int = 0               # decompressed bytes cached
 
 
 class QueryServer:
@@ -215,10 +224,12 @@ class QueryServer:
             self.stats.page_hits += delta.hits
             self.stats.page_misses += delta.misses
             self.stats.store_bytes_read += delta.bytes_read
+            self.stats.store_bytes_filled += delta.bytes_filled
             self.batch_io.append(BatchIO(
                 batch=self.stats.batches, real_bytes=delta.bytes_read,
                 modeled_bytes=self._sweep_bytes, page_hits=delta.hits,
-                page_misses=delta.misses))
+                page_misses=delta.misses,
+                filled_bytes=delta.bytes_filled))
             self._last_batch_bytes = float(delta.bytes_read)
         rows = []
         for i, s in enumerate(sources.tolist()):
@@ -386,12 +397,20 @@ def main() -> None:
                     help="serve disk-resident: save_store the index and "
                          "stream it through a bounded page cache")
     ap.add_argument("--cache-frac", type=float, default=0.25,
-                    help="page-cache budget as a fraction of the store "
-                         "segment bytes (with --store)")
+                    help="page-cache budget as a fraction of the store's "
+                         "DECOMPRESSED segment bytes (with --store) — "
+                         "codec-independent, since the cache holds "
+                         "decompressed blocks")
     ap.add_argument("--cache-policy", default="2q",
                     choices=["lru", "clock", "arc", "2q"],
                     help="page-cache eviction policy (with --store); "
                          "arc/2q are scan-resistant (DESIGN.md §6)")
+    ap.add_argument("--codec", default="raw",
+                    choices=["raw", "delta", "f16"],
+                    help="per-block segment codec (with --store): delta "
+                         "compresses id streams losslessly, f16 also "
+                         "narrows weights within a documented eps "
+                         "(DESIGN.md §6)")
     args = ap.parse_args()
 
     g = (grid_road_graph(args.side) if args.graph == "road"
@@ -407,11 +426,16 @@ def main() -> None:
     if args.store:
         import tempfile
         store_dir = tempfile.mkdtemp(prefix="hod_store_")
-        ix.save_store(store_dir)
-        from ..storage import segment_bytes
-        budget = int(args.cache_frac * segment_bytes(store_dir))
-        print(f"store: {store_dir} (page cache {budget} bytes, "
-              f"{args.cache_frac:.0%} of segments)")
+        ix.save_store(store_dir, codec=args.codec)
+        from ..storage import segment_bytes, segment_logical_bytes
+        # budget against the DECOMPRESSED footprint: the cache meters
+        # decompressed bytes, so a fraction of the compressed file size
+        # would shrink the effective budget by the compression ratio
+        budget = int(args.cache_frac * segment_logical_bytes(store_dir))
+        print(f"store: {store_dir} ({args.codec} codec, "
+              f"{segment_bytes(store_dir)} bytes on disk, page cache "
+              f"{budget} bytes = {args.cache_frac:.0%} of the "
+              f"decompressed segments)")
         server = QueryServer(store_path=store_dir, cache_bytes=budget,
                              batch_size=args.batch, sssp=args.sssp,
                              cache_entries=args.cache,
@@ -469,6 +493,11 @@ def main() -> None:
                   f"({st.page_hits} hits / {st.page_misses} misses), "
                   f"real {real/1e6:.2f} MB vs modeled {modeled/1e6:.2f} MB "
                   f"across {st.batches} batches")
+            if st.store_bytes_filled != real:
+                print(f"codec {server.store.codec}: {real/1e6:.2f} MB "
+                      f"compressed read -> {st.store_bytes_filled/1e6:.2f}"
+                      f" MB decompressed on fill "
+                      f"({real/max(st.store_bytes_filled,1):.0%} ratio)")
     finally:
         # The --store index is a throwaway in /tmp: always release the
         # segment fds / prefetch thread and remove it, even on Ctrl-C.

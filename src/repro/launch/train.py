@@ -12,11 +12,8 @@ identical modulo the mesh constructor.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from .. import shardlib as sl
 from ..checkpoint import CheckpointManager

@@ -18,7 +18,7 @@ matvec + local-top-k + gathered global top-k — batched dot, not a loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,7 +144,6 @@ def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
 def forward(params, dense: jnp.ndarray, sparse_ids: jnp.ndarray,
             cfg: DLRMConfig) -> jnp.ndarray:
     """dense [B, 13] f32, sparse_ids [B, 26] int32 -> CTR logits [B]."""
-    b = dense.shape[0]
     dense = sl.shard(dense, DP, None)
     bot = mlp(dense.astype(cfg.dtype), params["bot"])        # [B, 64]
     emb = embedding_lookup(params["tables"], sparse_ids)     # [B, 26, 64]

@@ -6,5 +6,5 @@ SpMM, so the edge-index formulation IS the substrate (see kernel taxonomy
 §GNN).  Edge arrays are padded with a sentinel node (id == n_nodes) whose
 row is sliced off after every scatter, keeping shapes static.
 """
-from .common import GraphBatch, segment_softmax, gather_scatter_sum  # noqa: F401
-from . import gcn, gin, schnet, equiformer_v2  # noqa: F401
+from . import equiformer_v2, gcn, gin, schnet  # noqa: F401
+from .common import GraphBatch, gather_scatter_sum, segment_softmax  # noqa: F401

@@ -34,8 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ... import shardlib as sl
-from .common import GraphBatch, graph_readout, mlp, mlp_init, scatter_sum, \
-    segment_softmax
+from .common import GraphBatch, graph_readout, mlp, mlp_init, scatter_sum
 
 
 @dataclasses.dataclass(frozen=True)

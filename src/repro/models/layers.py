@@ -23,8 +23,7 @@ flop inflation from one-hot dispatch einsums.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,5 @@
-from .adamw import adamw_init, adamw_update, OptState, clip_by_global_norm  # noqa: F401
+from .adamw import (OptState, adamw_init, adamw_update,  # noqa: F401
+                    clip_by_global_norm)
+from .compress import (ErrorFeedback, compressed_mean,  # noqa: F401
+                       dequantize_int8, quantize_int8, topk_sparsify)
 from .schedules import cosine_schedule, linear_warmup  # noqa: F401
-from .compress import (quantize_int8, dequantize_int8,  # noqa: F401
-                       topk_sparsify, ErrorFeedback, compressed_mean)

@@ -6,7 +6,6 @@ the usual LM convention.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -16,7 +16,7 @@ ratio directly.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

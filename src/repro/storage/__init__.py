@@ -1,9 +1,12 @@
 # Disk-resident index store (DESIGN.md §6): block segment files per
-# SweepPlan, a bounded-byte page cache metered through the block-I/O
+# SweepPlan (format v5: per-block codec frames, decompressed on cache
+# fill), a bounded-byte page cache metered through the block-I/O
 # device, and a streaming executor that runs queries with peak plan
 # memory O(largest level) instead of O(index).
-from .blockfile import (DEFAULT_BLOCK_BYTES, IndexStore,  # noqa: F401
-                        SEGMENT_NAMES, SegmentReader, load_store,
-                        open_store, save_store, segment_bytes)
+from .blockfile import (DEFAULT_BLOCK_BYTES, DEFAULT_CODEC,  # noqa: F401
+                        IndexStore, SEGMENT_NAMES, SegmentReader,
+                        load_store, open_store, save_store, segment_bytes,
+                        segment_logical_bytes)
+from .codecs import CODEC_IDS, F16_EPS_REL  # noqa: F401
 from .pagecache import CacheStats, PageCache  # noqa: F401
 from .stream import StreamingQueryEngine  # noqa: F401

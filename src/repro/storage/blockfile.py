@@ -9,15 +9,27 @@ A *store* is a directory holding the index in two tiers:
   plans' padded envelope;
 * ``plan_f.seg`` / ``plan_b.seg`` / ``plan_core.seg`` — one *segment
   file* per :class:`~repro.core.index.SweepPlan`, the tier queries
-  stream.  Each segment is a sequence of fixed-size blocks::
+  stream.  A v5 segment is a fixed-size *logical* block space stored
+  as variable-length compressed frames::
 
-      block 0        header: magic, format version (4), block_bytes,
+      block 0        header: magic, format version (5), block_bytes,
                      n_real/l_pad/m_pad/k_fix/sentinel, footer extent
-      blocks 1..     the *affinity-packed* level slabs: one compact
-                     slab per real level, in scan order, back-to-back
-                     at byte granularity (levels share blocks)
+      frames 1..     one frame per logical data block, back-to-back:
+                     (codec_id u8, comp_len u32, crc32 u32) + payload
+                     compressed by the per-block codec
+                     (`repro.storage.codecs`: raw / delta / f16)
       footer         JSON per-level extent table [byte_off, byte_len,
-                     m_real] + one CRC32 per data block
+                     m_real] (logical offsets) + per-frame table
+                     [file_off, comp_len, codec_id, crc] + codec name
+
+  The *logical* stream the extents address is exactly the v4 affinity
+  layout: compact level slabs back-to-back at byte granularity, padded
+  levels/rows reconstructed from header defaults.  Level addressing,
+  cache keys, and the sweep's block-id order are therefore codec-
+  independent — only the bytes on disk shrink.  Each frame decodes
+  alone (the codec span maps are derived from the extents), so random
+  block access never touches a neighbor; a frame that a codec cannot
+  shrink is stored raw (``codec_id`` is per frame).
 
   The v4 *affinity layout* (build-time partitioning, ROADMAP): a level
   slab stores only the level's **real** rows —
@@ -38,11 +50,15 @@ Every block read goes through a :class:`~repro.storage.pagecache
 .PageCache` and — on a miss — is metered through the store's
 :class:`~repro.core.io_sim.BlockDevice` with a *global* block id
 (segments get disjoint id ranges), so ``IOStats`` classifies the
-actual read pattern.  Misses are also integrity-checked against the
-footer's per-block CRC32, so a corrupt segment surfaces as a
-``ValueError`` in the querying thread instead of silent garbage
-distances.  Open-time header/footer reads are not charged; only
-query-time block fetches are.
+actual read pattern.  Codec frames *decompress on cache fill*: the
+cache holds (and budgets) the decompressed ``block_bytes`` payload,
+while the device and ``CacheStats.bytes_read`` are charged the
+*compressed* payload bytes the miss actually read — frame and footer
+metadata, like the v4 footer, are uncharged.  Misses are integrity-
+checked against the frame CRC32 (v4: the footer's per-block CRCs), so
+a corrupt segment surfaces as a ``ValueError`` in the querying thread
+instead of silent garbage distances.  Open-time header/footer reads
+are not charged; only query-time block fetches are.
 
 Segment-aware admission (DESIGN.md §6): ``IndexStore`` marks the
 small, repeatedly-re-read segments (``plan_core`` by default) as
@@ -64,18 +80,28 @@ import numpy as np
 from ..core.index import (FORMAT_VERSION, HoDIndex, SweepPlan,
                           core_scan_bytes, scan_cost_bytes)
 from ..core.io_sim import BlockDevice
+from .codecs import (CODEC_IDS, block_spans, decode_block, encode_block,
+                     level_spans)
 from .pagecache import PageCache
 
 __all__ = ["IndexStore", "SegmentReader", "save_store", "open_store",
-           "load_store", "segment_bytes", "SEGMENT_NAMES",
-           "DEFAULT_BLOCK_BYTES", "PIN_SEGMENTS"]
+           "load_store", "segment_bytes", "segment_logical_bytes",
+           "SEGMENT_NAMES", "DEFAULT_BLOCK_BYTES", "DEFAULT_CODEC",
+           "PIN_SEGMENTS"]
 
-MAGIC = b"HODSEG04"
+MAGIC = b"HODSEG05"
+_MAGIC_V4 = b"HODSEG04"
 _MAGIC_V3 = b"HODSEG03"
 _HEADER = struct.Struct("<8sIIIIIIIIQQ")   # magic, version, block_bytes,
 # n_real, l_pad, m_pad, k_fix, sentinel, reserved, footer_off, footer_len
+#: v5 per-frame header: codec_id (u8), pad, comp_len (u32), crc32 (u32).
+_FRAME = struct.Struct("<B3xII")
 RESIDENT_FILE = "resident.npz"
 SEGMENT_NAMES = ("plan_f", "plan_b", "plan_core")
+#: codec a store is written with unless asked otherwise — ``raw`` keeps
+#: fills decode-free (the v4-equivalent payload, framed); ``delta``
+#: trades decode CPU for compressed reads (`repro.storage.codecs`).
+DEFAULT_CODEC = "raw"
 #: segments pinned resident by default (segment-aware admission): the
 #: core plan is small, read once per SSSP reconstruction, and exactly
 #: the kind of hot tier a cyclic ``plan_f`` scan would otherwise evict.
@@ -124,14 +150,26 @@ def _level_slab(plan: SweepPlan, lvl: int, m_real: int) -> bytes:
     return b"".join(p.tobytes() for p in parts)
 
 
+def _segment_spans(extents, k_fix: int):
+    """Typed span map of a segment's whole logical stream (shared by
+    the writer and the v5 reader — both derive it from the extents)."""
+    spans = []
+    for off, length, m_real in extents:
+        spans.extend(level_spans(off, length, m_real, k_fix))
+    return spans
+
+
 def _write_segment(path: str, plan: SweepPlan, sentinel: int,
-                   block_bytes: int) -> None:
+                   block_bytes: int, codec: str = DEFAULT_CODEC) -> None:
     if block_bytes < _HEADER.size:
         raise ValueError(f"block_bytes must be >= {_HEADER.size}")
+    if codec not in CODEC_IDS:
+        raise ValueError(f"unknown codec {codec!r} "
+                         f"(have {sorted(CODEC_IDS)})")
     n_real = plan.n_real_levels
     extents = []
     slabs = []
-    off = block_bytes                     # data starts at block 1
+    off = block_bytes                     # logical data starts at block 1
     for lvl in range(n_real):
         m_real = _trim_rows(plan, lvl, sentinel)
         slab = _level_slab(plan, lvl, m_real)
@@ -142,30 +180,46 @@ def _write_segment(path: str, plan: SweepPlan, sentinel: int,
     pad = (-len(data)) % block_bytes
     data += b"\0" * pad
     n_data_blocks = len(data) // block_bytes
-    crcs = [zlib.crc32(data[i * block_bytes:(i + 1) * block_bytes])
-            for i in range(n_data_blocks)]
+    spans = _segment_spans(extents, plan.k_fix)
+    span_starts = [s for _, s, _ in spans]
+    frames = []                           # [file_off, comp_len, id, crc]
+    frame_blobs = []
+    file_off = block_bytes                # frames start after the header
+    for i in range(n_data_blocks):
+        lo = (i + 1) * block_bytes        # logical window of block i+1
+        payload = data[i * block_bytes:(i + 1) * block_bytes]
+        codec_id, blob = encode_block(
+            codec, payload,
+            block_spans(spans, lo, lo + block_bytes, starts=span_starts))
+        crc = zlib.crc32(blob)
+        frames.append([file_off, len(blob), codec_id, crc])
+        frame_blobs.append(_FRAME.pack(codec_id, len(blob), crc) + blob)
+        file_off += _FRAME.size + len(blob)
     footer = json.dumps({"extents": extents, "n_real": n_real,
-                         "crcs": crcs}).encode()
-    footer_off = block_bytes * (1 + n_data_blocks)
+                         "codec": codec, "frames": frames}).encode()
     header = _HEADER.pack(MAGIC, FORMAT_VERSION, block_bytes, n_real,
                           plan.l_pad, plan.m_pad, plan.k_fix, sentinel, 0,
-                          footer_off, len(footer))
+                          file_off, len(footer))
     with open(path, "wb") as f:
         f.write(header.ljust(block_bytes, b"\0"))
-        f.write(data)
+        for blob in frame_blobs:
+            f.write(blob)
         f.write(footer)
 
 
 def save_store(ix: HoDIndex, path: str,
-               block_bytes: int = DEFAULT_BLOCK_BYTES) -> None:
+               block_bytes: int = DEFAULT_BLOCK_BYTES,
+               codec: str = DEFAULT_CODEC) -> None:
     """Write ``ix`` as a disk-resident store directory at ``path``.
 
     The resident tier reuses the ``.npz`` machinery (minus the plan
-    arrays); each sweep plan becomes one block segment file in the v4
-    affinity layout (compact level slabs sharing block neighborhoods).
-    Per-plan compact-payload counts (real rows/edges) ride in the
-    resident file so a store-backed server can model the
-    paper-comparable scan cost without materializing any plan.
+    arrays); each sweep plan becomes one v5 block segment file — the
+    v4 affinity logical layout (compact level slabs sharing block
+    neighborhoods), framed per block by ``codec`` (``"raw"`` /
+    ``"delta"`` / ``"f16"``, see `repro.storage.codecs`).  Per-plan
+    compact-payload counts (real rows/edges) ride in the resident file
+    so a store-backed server can model the paper-comparable scan cost
+    without materializing any plan.
     """
     ix.ensure_plans()
     os.makedirs(path, exist_ok=True)
@@ -178,19 +232,19 @@ def save_store(ix: HoDIndex, path: str,
         os.path.join(path, RESIDENT_FILE), meta=ix._meta_array(),
         format_version=np.int64(FORMAT_VERSION),
         store=np.bool_(True), block_bytes=np.int64(block_bytes),
-        k_cap=np.int64(ix.k_cap),
+        codec=np.str_(codec), k_cap=np.int64(ix.k_cap),
         **ix.resident_arrays(), **plan_stats)
     for name in SEGMENT_NAMES:
         _write_segment(os.path.join(path, f"{name}.seg"),
-                       getattr(ix, name), ix.n, block_bytes)
+                       getattr(ix, name), ix.n, block_bytes, codec=codec)
 
 
 # ---------------------------------------------------------------------- read
 class SegmentReader:
     """One open segment file: header/footer-described slab geometry +
     cached, CRC-checked, device-metered block reads (thread-safe via
-    ``os.pread``).  Reads both the v4 affinity layout and v3
-    block-aligned segments."""
+    ``os.pread``).  Reads v5 codec-framed segments plus the v4
+    affinity layout and v3 block-aligned segments."""
 
     def __init__(self, path: str, base_block: int, device: BlockDevice,
                  cache: PageCache, name: str, pin_blocks: bool = False):
@@ -210,7 +264,7 @@ class SegmentReader:
             (magic, self.version, self.block_bytes, self.n_real,
              self.l_pad, self.m_pad, self.k_fix, self.sentinel, _res,
              footer_off, footer_len) = _HEADER.unpack(raw)
-            if magic not in (MAGIC, _MAGIC_V3):
+            if magic not in (MAGIC, _MAGIC_V4, _MAGIC_V3):
                 raise ValueError(f"{path}: not a HoD segment file "
                                  f"(magic {magic!r})")
             if self.version > FORMAT_VERSION:
@@ -222,7 +276,17 @@ class SegmentReader:
                 raise ValueError(
                     f"{path}: footer/header level count mismatch")
             self.extents = footer["extents"]
-            self._crcs = footer.get("crcs")   # absent in v3 segments
+            self._crcs = footer.get("crcs")   # v4 only (absent in v3)
+            #: v5: [file_off, comp_len, codec_id, crc] per data block,
+            #: plus the codec the segment was written with
+            self._frames = footer.get("frames")
+            self.codec = footer.get("codec", "raw")
+            self._spans = (_segment_spans(self.extents, self.k_fix)
+                           if self.version >= 5 else None)
+            #: bisect index into the (sorted) span map, so a cache miss
+            #: clips one block's window in O(log L) not O(L)
+            self._span_starts = ([s for _, s, _ in self._spans]
+                                 if self._spans is not None else None)
         except Exception:
             self.close()
             raise
@@ -233,7 +297,34 @@ class SegmentReader:
             self._fd = None
 
     # ------------------------------------------------------------- block I/O
-    def _load_block(self, block: int) -> bytes:
+    def _load_block(self, block: int):
+        """Load one logical block for the page cache.
+
+        v5 returns ``(decompressed_payload, compressed_bytes)`` — the
+        decompress-on-fill pair the cache budgets/meters respectively;
+        v3/v4 return the raw block (read bytes == resident bytes).  The
+        device is charged the bytes actually read off "disk" (the
+        compressed frame payload; frame/footer metadata is uncharged).
+        """
+        if self.version >= 5:
+            file_off, comp_len, codec_id, crc = self._frames[block - 1]
+            raw = os.pread(self._fd, _FRAME.size + comp_len, file_off)
+            f_codec, f_len, f_crc = _FRAME.unpack_from(raw)
+            blob = raw[_FRAME.size:]
+            if (len(blob) != comp_len or f_codec != codec_id
+                    or f_len != comp_len or f_crc != crc
+                    or zlib.crc32(blob) != crc):
+                raise ValueError(
+                    f"{self.path}: CRC mismatch in block {block} — "
+                    "corrupt segment read")
+            self.device.access_block(self.base_block + block, comp_len)
+            lo = block * self.block_bytes
+            data = decode_block(
+                codec_id, blob,
+                block_spans(self._spans, lo, lo + self.block_bytes,
+                            starts=self._span_starts),
+                self.block_bytes)
+            return data, comp_len
         data = os.pread(self._fd, self.block_bytes,
                         block * self.block_bytes)
         if self._crcs is not None and 1 <= block <= len(self._crcs):
@@ -366,6 +457,7 @@ class IndexStore:
         self._plan_scan: Dict[str, _PlanScanStats] = {}
         with np.load(resident) as z:
             self.block_bytes = int(z["block_bytes"])
+            self.codec = str(z["codec"]) if "codec" in z else "raw"
             self.resident = HoDIndex._from_npz(z)
             for name in SEGMENT_NAMES:
                 self._plan_scan[name] = _PlanScanStats(
@@ -448,10 +540,40 @@ class IndexStore:
 
 def segment_bytes(path: str) -> int:
     """On-disk size of a store's streamed tier (the three segment
-    files) — the usual denominator for ``cache_bytes`` budgets; pure
-    ``os.path.getsize``, no store open needed."""
+    files) — compressed bytes for codec stores; pure
+    ``os.path.getsize``, no store open needed.  For sizing a page-cache
+    budget use :func:`segment_logical_bytes`: the cache meters
+    *decompressed* bytes, so a fraction of the compressed on-disk size
+    would silently shrink the effective budget by the compression
+    ratio."""
     return sum(os.path.getsize(os.path.join(path, f"{name}.seg"))
                for name in SEGMENT_NAMES)
+
+
+def segment_logical_bytes(path: str) -> int:
+    """Decompressed (cache-side) footprint of a store's streamed tier:
+    the data-region bytes a page cache would hold with every block
+    resident.  Codec-independent — a ``delta`` store reports exactly
+    the same figure as the ``raw`` store of the same index — which
+    makes it the right denominator for ``cache_frac``-style budgets.
+    Header/footer metadata (never cached) is excluded."""
+    total = 0
+    for name in SEGMENT_NAMES:
+        p = os.path.join(path, f"{name}.seg")
+        with open(p, "rb") as f:
+            (magic, version, block_bytes, _n_real, _l, _m, _k, _s, _r,
+             footer_off, footer_len) = _HEADER.unpack(f.read(_HEADER.size))
+            if magic not in (MAGIC, _MAGIC_V4, _MAGIC_V3):
+                raise ValueError(f"{p}: not a HoD segment file")
+            if version >= 5:
+                f.seek(footer_off)
+                footer = json.loads(f.read(footer_len))
+                total += block_bytes * len(footer["frames"])
+            else:
+                # v3/v4 store data uncompressed and block-aligned, so
+                # the data region [block 1, footer) IS the footprint
+                total += max(0, footer_off - block_bytes)
+    return total
 
 
 def open_store(path: str, device: Optional[BlockDevice] = None,

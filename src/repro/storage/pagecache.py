@@ -7,7 +7,12 @@ resident and answers every block fetch either from memory (*hit* — no
 device charge) or by invoking the caller's loader (*miss* — the loader
 reads the block from the segment file and meters it through the shared
 :class:`~repro.core.io_sim.BlockDevice`, so ``IOStats`` reflects actual
-bytes read).
+bytes read).  Format-v5 codec segments *decompress on fill*: the loader
+hands back the decompressed block together with the compressed byte
+count it read, so the byte budget and residency meter **decompressed**
+(usable) bytes while ``bytes_read``/``IOStats`` meter the
+**compressed** bytes that actually moved — the hit-rate-vs-budget
+tradeoff the ``codec`` column in BENCH_serve measures (DESIGN.md §6).
 
 Four eviction policies:
 
@@ -84,9 +89,10 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
-    bytes_read: int = 0     # fetched via loaders (actual "disk" bytes)
+    bytes_read: int = 0     # actual "disk" bytes loaders consumed
     peak_bytes: int = 0     # high-water mark of resident bytes
     ghost_hits: int = 0     # misses whose key had a live ghost (arc/2q)
+    bytes_filled: int = 0   # decompressed bytes handed back by loaders
 
     def hit_rate(self) -> float:
         total = self.hits + self.misses
@@ -99,7 +105,8 @@ class CacheStats:
                           self.evictions - other.evictions,
                           self.bytes_read - other.bytes_read,
                           self.peak_bytes,
-                          self.ghost_hits - other.ghost_hits)
+                          self.ghost_hits - other.ghost_hits,
+                          self.bytes_filled - other.bytes_filled)
 
     def snapshot(self) -> "CacheStats":
         return dataclasses.replace(self)
@@ -163,6 +170,15 @@ class PageCache:
             pin: bool = False) -> bytes:
         """Return the block for ``key``, loading (and caching) on a miss.
 
+        The loader may return either the block ``bytes``, or a
+        ``(bytes, disk_bytes)`` pair when filling costs fewer disk
+        bytes than it yields — a codec segment's decompress-on-fill
+        (DESIGN.md §6): the *decompressed* block is what gets cached
+        (so the byte budget meters resident, usable bytes) while
+        ``stats.bytes_read`` advances by the *compressed* bytes the
+        loader actually read.  ``stats.bytes_filled`` always meters the
+        decompressed side.
+
         ``pin=True`` additionally pins the block (hit or miss) if the
         pin budget allows; pinned blocks are never evicted until
         :meth:`unpin` releases them.
@@ -175,8 +191,13 @@ class PageCache:
                     self._try_pin(key)
                 return data
             self.stats.misses += 1
-            data = load()
-            self.stats.bytes_read += len(data)
+            loaded = load()
+            if isinstance(loaded, tuple):
+                data, disk_bytes = loaded
+            else:
+                data, disk_bytes = loaded, len(loaded)
+            self.stats.bytes_read += disk_bytes
+            self.stats.bytes_filled += len(data)
             self._admit(key, data, pin)
             self.stats.peak_bytes = max(self.stats.peak_bytes,
                                         self._resident())

@@ -1,8 +1,8 @@
 """Storage smoke check (CI): build → ``save_store`` → serve from the
 store at 5% and 25% page-cache budgets → verify against the in-memory
-oracle.
+oracle — then repeat the 25% run from a ``delta``-codec store.
 
-Asserts the ISSUE-3 and ISSUE-4 acceptance criteria end to end:
+Asserts the ISSUE-3/4/5 acceptance criteria end to end:
 
 * store-served distances are **bit-identical** to the in-memory
   engine's and match the Dijkstra oracle to float tolerance;
@@ -14,7 +14,12 @@ Asserts the ISSUE-3 and ISSUE-4 acceptance criteria end to end:
 * a partial budget actually buys hit-rate: at 25% under the default
   scan-resistant policy the hit rate must be strictly positive (the
   PR-3 LRU cache thrashed to 0.0 here — guarded so policy or layout
-  regressions fail CI).
+  regressions fail CI);
+* the ``delta`` codec (format v5) pays off at the same 25% budget:
+  smaller segments on disk, fewer compressed bytes read, hit rate no
+  worse than the raw store (the logical block space and the
+  decompressed-byte budget are identical, so the access/hit sequence
+  is too), and answers still bit-identical.
 
     PYTHONPATH=src python -m repro.storage.smoke
 """
@@ -32,11 +37,10 @@ from .blockfile import segment_bytes
 N_QUERIES = 16
 
 
-def _serve_and_verify(store_dir: str, frac: float, sources: np.ndarray,
+def _serve_and_verify(store_dir: str, budget: int, sources: np.ndarray,
                       direct: np.ndarray) -> QueryServer:
-    """Serve from the store at one cache budget and assert the answers
-    are bit-identical to the in-memory engine's rows."""
-    budget = int(frac * segment_bytes(store_dir))
+    """Serve from the store at one cache budget (bytes) and assert the
+    answers are bit-identical to the in-memory engine's rows."""
     server = QueryServer(store_path=store_dir, cache_bytes=budget,
                          batch_size=8, cache_entries=0, warm_start=True)
     try:
@@ -66,8 +70,10 @@ def main() -> None:
     with tempfile.TemporaryDirectory() as tmp:
         store_dir = f"{tmp}/store"
         ix.save_store(store_dir, block_bytes=4096)
+        raw_seg = segment_bytes(store_dir)
 
-        server = _serve_and_verify(store_dir, 0.05, sources, direct)
+        server = _serve_and_verify(store_dir, int(0.05 * raw_seg),
+                                   sources, direct)
         st = server.stats
         io = server.modeled_io()
         assert st.page_misses > 0, "no real block reads happened"
@@ -79,16 +85,40 @@ def main() -> None:
         # 25% budget: the scan-resistant default (2Q + affinity layout)
         # must buy actual hit-rate — 0.0 here means cyclic-scan thrash
         # is back (the PR-3 LRU baseline).
-        st25 = _serve_and_verify(store_dir, 0.25, sources, direct).stats
+        budget25 = int(0.25 * raw_seg)
+        st25 = _serve_and_verify(store_dir, budget25, sources, direct).stats
         assert st25.page_hit_rate() > 0.0, \
             "25% cache budget bought a 0.0 hit rate — scan-resistant " \
             "policy or affinity layout regressed"
+
+        # delta-codec store (format v5) at the SAME decompressed-byte
+        # budget: smaller on disk, fewer compressed bytes read, hit
+        # rate no worse than raw, answers still bit-identical.
+        delta_dir = f"{tmp}/store_delta"
+        ix.save_store(delta_dir, block_bytes=4096, codec="delta")
+        delta_seg = segment_bytes(delta_dir)
+        assert delta_seg < raw_seg, \
+            f"delta segments ({delta_seg}) not smaller than raw ({raw_seg})"
+        std = _serve_and_verify(delta_dir, budget25, sources, direct).stats
+        assert std.page_hit_rate() >= st25.page_hit_rate(), \
+            f"delta hit rate {std.page_hit_rate():.3f} < raw " \
+            f"{st25.page_hit_rate():.3f} at the same budget"
+        assert std.store_bytes_read < st25.store_bytes_read, \
+            "delta store read no fewer bytes than raw"
+        assert std.store_bytes_filled > std.store_bytes_read, \
+            "decompress-on-fill accounting missing (filled <= read)"
 
         print(f"storage smoke OK: {st.requests} queries from a "
               f"5% cache ({st.page_hit_rate():.1%} hit rate), "
               f"{st.store_bytes_read/1e6:.2f} MB actually read "
               f"({io.seq_blocks} seq / {io.rand_blocks} rand blocks), "
-              f"{st25.page_hit_rate():.1%} hit rate at a 25% budget, "
+              f"{st25.page_hit_rate():.1%} hit rate at a 25% budget; "
+              f"delta codec: segments {delta_seg/1e6:.2f} vs "
+              f"{raw_seg/1e6:.2f} MB raw "
+              f"({1 - delta_seg/raw_seg:.0%} smaller), "
+              f"{std.store_bytes_read/1e6:.2f} vs "
+              f"{st25.store_bytes_read/1e6:.2f} MB read, "
+              f"hit rate {std.page_hit_rate():.1%}, "
               f"answers bit-identical to the in-memory engine")
 
 

@@ -32,10 +32,17 @@ one the pins save.  A ``finally`` ledger releases any leftover leases
 even when a sweep raises.
 
 ``prefetch=True`` overlaps the next level's block reads with the
-current level's compute on a single background thread — the streaming
-analogue of read-ahead.  The page cache and segment readers are
-thread-safe (one lock, ``os.pread``), so the prefetcher needs no extra
-coordination.  Loader failures (e.g. a CRC mismatch on a corrupt
+current level's *compute* on a single background thread — the
+streaming analogue of read-ahead.  For a v5 codec store the prefetch
+thread also runs the decompress-on-fill work, so decode overlaps the
+query thread's jit step the same way the read does.  Caveat: fills
+(read + CRC + decode) run under the page cache's one lock — by design,
+so budget accounting stays exact and disk access serializes like the
+modeled one-spindle device — so a query-thread cache *hit* that races
+an in-flight prefetch fill waits for that fill; prefetch buys overlap
+with compute, not with other cache traffic.  The page cache and
+segment readers are thread-safe (that one lock, ``os.pread``), so the
+prefetcher needs no extra coordination.  Loader failures (e.g. a CRC mismatch on a corrupt
 segment) always surface in the querying thread: the level generator
 re-raises the prefetched exception on the next pull, and if the
 consumer abandons the sweep mid-stream the generator's cleanup drains

@@ -1,0 +1,105 @@
+"""The CI bench-regression gate (benchmarks/check_regression.py).
+
+The acceptance criterion is behavioral: identical runs pass, a
+doctored baseline (inflated hit rate / throughput, extra rows) fails,
+and the CLI exits non-zero on regression.  All in-process — no serving
+run needed, the gate is pure row comparison.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+# repo root on sys.path: benchmarks/ is a plain (uninstalled) package
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from benchmarks.check_regression import compare, main  # noqa: E402
+
+BASELINE = {
+    "git_sha": "deadbeef",
+    "tables": {
+        "serve": [
+            {"batch": 1, "queries_per_s": 200.0},
+            {"batch": 16, "queries_per_s": 600.0},
+        ],
+        "store": [
+            {"codec": "raw", "cache_frac": 0.25, "policy": "2q",
+             "hit_rate": 0.55, "real_bytes": 7_000_000},
+            {"codec": "delta", "cache_frac": 0.25, "policy": "2q",
+             "hit_rate": 0.55, "real_bytes": 3_500_000},
+        ],
+        "cold_start": [{"load_s": 0.05}],
+    },
+}
+
+
+def test_identical_run_passes():
+    assert compare(BASELINE, BASELINE) == []
+
+
+def test_within_tolerance_passes():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["serve"][0]["queries_per_s"] = 170.0   # -15% < 20%
+    fresh["tables"]["store"][0]["hit_rate"] = 0.52         # -3pp < 5pp
+    fresh["tables"]["store"][0]["real_bytes"] = 7_200_000  # +3% < 10%
+    assert compare(BASELINE, fresh) == []
+
+
+def test_doctored_baseline_fails():
+    """Feeding the gate a baseline with inflated numbers must flag the
+    honest fresh run as a regression (the CI criterion)."""
+    doctored = copy.deepcopy(BASELINE)
+    doctored["tables"]["store"][0]["hit_rate"] = 0.99
+    doctored["tables"]["serve"][1]["queries_per_s"] = 6000.0
+    violations = compare(doctored, BASELINE)
+    assert len(violations) == 2
+    assert any("hit rate" in v for v in violations)
+    assert any("throughput" in v for v in violations)
+
+
+def test_bytes_read_growth_fails():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["store"][1]["real_bytes"] = 5_000_000  # +43%
+    violations = compare(BASELINE, fresh)
+    assert violations and "bytes read" in violations[0]
+    assert "codec=delta" in violations[0]
+
+
+def test_missing_row_fails():
+    """Silently dropping a benchmark config cannot pass the gate."""
+    fresh = copy.deepcopy(BASELINE)
+    del fresh["tables"]["serve"][0]
+    del fresh["tables"]["store"][1]
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 2
+    assert all("missing" in v for v in violations)
+
+
+def test_extra_fresh_rows_are_ignored():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["store"].append(
+        {"codec": "f16", "cache_frac": 0.05, "policy": "2q",
+         "hit_rate": 0.1, "real_bytes": 1})
+    assert compare(BASELINE, fresh) == []
+
+
+def test_throughput_check_can_be_skipped():
+    doctored = copy.deepcopy(BASELINE)
+    doctored["tables"]["serve"][0]["queries_per_s"] = 9e9
+    assert compare(doctored, BASELINE, check_throughput=False) == []
+    assert compare(doctored, BASELINE)          # on by default
+
+
+@pytest.mark.parametrize("doctor,code", [(False, 0), (True, 1)])
+def test_cli_exit_codes(tmp_path, capsys, doctor, code):
+    baseline = copy.deepcopy(BASELINE)
+    if doctor:
+        baseline["tables"]["store"][0]["hit_rate"] = 0.99
+    bp, fp = tmp_path / "baseline.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(baseline))
+    fp.write_text(json.dumps(BASELINE))
+    assert main(["--baseline", str(bp), "--fresh", str(fp)]) == code
+    out = capsys.readouterr().out
+    assert ("FAIL" in out) == doctor

@@ -20,7 +20,6 @@ import numpy as np
 import pytest
 
 from hypsupport import given, settings, st
-
 from repro.storage import PageCache
 from repro.storage.pagecache import POLICIES
 

@@ -1,6 +1,5 @@
 """Checkpoint/restart, elastic recovery, straggler detection, data resume."""
 import os
-import time
 
 import jax
 import jax.numpy as jnp

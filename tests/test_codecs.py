@@ -1,0 +1,283 @@
+"""Per-block segment codecs (format v5, DESIGN.md §6).
+
+Covers the ISSUE-5 acceptance criteria at the codec layer:
+
+* encode/decode identity for every lossless path (``raw`` everywhere,
+  ``delta`` everywhere, ``f16`` on id spans) — property-tested over
+  random block payloads, span layouts, and block boundaries;
+* the documented ``f16`` eps policy: narrowed weights within
+  ``F16_EPS_REL`` relative error, out-of-policy weights bit-exact;
+* store-level conformance: a ``delta`` store answers SSD/SSSP
+  **bit-identically** to raw/in-memory, an ``f16`` store within eps,
+  and decompress-on-fill accounting (cache budgets decompressed bytes,
+  device/``bytes_read`` meter compressed bytes).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from hypsupport import given, settings, st
+from repro.core import (BuildConfig, QueryEngine, build_hod,
+                        gnm_random_digraph, pack_index)
+from repro.storage import (IndexStore, PageCache, StreamingQueryEngine,
+                           segment_bytes)
+from repro.storage.codecs import (CODEC_IDS, F16_EPS_REL, KIND_F32,
+                                  KIND_I32, KIND_RAW, block_spans,
+                                  decode_block, encode_block, level_spans,
+                                  vint_decode, vint_encode)
+
+CFG = BuildConfig(max_core_nodes=32, max_core_edges=1024, seed=0)
+
+
+@pytest.fixture(scope="module")
+def packed():
+    g = gnm_random_digraph(150, 600, seed=4, weighted=True)
+    res = build_hod(g, CFG)
+    return g, pack_index(g, res, chunk=64)
+
+
+# ----------------------------------------------------------------- varints
+def test_varint_roundtrip_extremes():
+    vals = np.array([0, 1, -1, 127, -128, 2**31 - 1, -2**31,
+                     2**32 - 1, -(2**32) + 1], np.int64)
+    out = vint_decode(vint_encode(vals), vals.size)
+    np.testing.assert_array_equal(out, vals)
+
+
+def test_varint_empty_and_malformed():
+    assert vint_encode(np.empty(0, np.int64)) == b""
+    np.testing.assert_array_equal(vint_decode(b"", 0),
+                                  np.empty(0, np.int64))
+    with pytest.raises(ValueError):
+        vint_decode(b"\x00\x00", 1)       # trailing terminator
+    with pytest.raises(ValueError):
+        vint_decode(b"\x80", 1)           # unterminated value
+    with pytest.raises(ValueError):
+        vint_decode(b"\x00", 2)           # too few values
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(-2**31, 2**31 - 1), min_size=0,
+                max_size=200))
+def test_varint_roundtrip_property(vals):
+    arr = np.asarray(vals, np.int64)
+    deltas = np.diff(arr, prepend=np.int64(0))
+    out = vint_decode(vint_encode(deltas), deltas.size)
+    np.testing.assert_array_equal(out, deltas)
+
+
+# --------------------------------------------------------------- span maps
+def test_level_spans_cover_slab_exactly():
+    m, k = 7, 3
+    length = 4 * m + 3 * 4 * m * k
+    spans = level_spans(100, length, m, k)
+    assert spans[0][1] == 100 and spans[-1][2] == 100 + length
+    for (_, _, e), (_, s, _) in zip(spans, spans[1:]):
+        assert e == s
+    kinds = [s[0] for s in spans]
+    assert kinds == [KIND_I32, KIND_I32, KIND_F32, KIND_I32]
+    # fallback layout stays untyped; empty levels produce nothing
+    assert level_spans(100, length, -1, k) == [(KIND_RAW, 100,
+                                                 100 + length)]
+    assert level_spans(100, 0, 0, k) == []
+
+
+def test_block_spans_word_phase_at_unaligned_boundaries():
+    """A block boundary that splits an i32 word must shed the fragments
+    as raw so each block still decodes alone."""
+    spans = [(KIND_I32, 10, 50), (KIND_F32, 50, 90)]
+    # block [0, 32): i32 words at 10+4i -> last whole word ends at 46>32
+    bs = block_spans(spans, 0, 32)
+    assert bs[0] == (KIND_RAW, 0, 10)
+    assert (KIND_I32, 10, 30) in bs           # 5 whole words
+    assert bs[-1] == (KIND_RAW, 30, 32)       # split word -> raw edge
+    # coverage is exact and gap-free for any cut, and the bisect fast
+    # path (precomputed starts, the cache-miss path) agrees exactly
+    starts = [s for _, s, _ in spans]
+    for lo, hi in ((0, 32), (32, 64), (64, 96), (0, 96), (33, 61)):
+        cover = block_spans(spans, lo, hi)
+        assert cover == block_spans(spans, lo, hi, starts=starts)
+        assert cover[0][1] == 0 and cover[-1][2] == hi - lo
+        for (_, _, e), (_, s, _) in zip(cover, cover[1:]):
+            assert e == s
+
+
+@st.composite
+def _block_case(draw):
+    """Random payload + span layout + block size."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    n_spans = draw(st.integers(1, 5))
+    spans, parts, off = [], [], draw(st.integers(0, 9))
+    parts.append(rng.bytes(off))
+    start = off
+    for _ in range(n_spans):
+        kind = (KIND_I32, KIND_F32, KIND_RAW)[draw(st.integers(0, 2))]
+        if kind == KIND_RAW:
+            nb = draw(st.integers(0, 40))
+            parts.append(rng.bytes(nb))
+        else:
+            n = draw(st.integers(0, 30))
+            nb = 4 * n
+            if kind == KIND_I32:
+                lo = draw(st.integers(-5, 5)) * 100
+                parts.append(np.sort(rng.integers(
+                    lo, lo + 2000, n)).astype("<i4").tobytes())
+            else:
+                parts.append((rng.random(n).astype("<f4") * 50).tobytes())
+        if nb:
+            spans.append((kind, start, start + nb))
+        start += nb
+    payload = b"".join(parts)
+    block = draw(st.integers(16, 96))
+    return payload, spans, block
+
+
+@settings(max_examples=40, deadline=None)
+@given(_block_case())
+def test_codec_roundtrip_property(case):
+    """Random blocks × all codecs: lossless codecs reproduce the bytes
+    exactly; f16 reproduces non-weight bytes exactly and weights within
+    the documented eps."""
+    payload, spans, block = case
+    pad = (-len(payload)) % block
+    payload += b"\0" * pad
+    for codec in ("raw", "delta", "f16"):
+        out = bytearray()
+        for lo in range(0, len(payload), block):
+            chunk = payload[lo:lo + block]
+            bs = block_spans(spans, lo, lo + block)
+            cid, blob = encode_block(codec, chunk, bs)
+            assert len(blob) <= len(chunk)      # raw fallback bounds it
+            out += decode_block(cid, blob, bs, len(chunk))
+        out = bytes(out)
+        if codec == "f16":
+            mism = [i for i in range(len(payload))
+                    if out[i] != payload[i]]
+            for kind, s, e in spans:
+                if kind != KIND_F32:
+                    assert not [i for i in mism if s <= i < e]
+            for kind, s, e in spans:
+                if kind == KIND_F32:
+                    w0 = np.frombuffer(payload[s:e], "<f4")
+                    w1 = np.frombuffer(out[s:e], "<f4")
+                    assert (np.abs(w1 - w0)
+                            <= F16_EPS_REL * np.abs(w0) + 1e-12).all()
+        else:
+            assert out == payload, codec
+
+
+def test_unknown_codec_and_corrupt_frames_raise():
+    payload = np.arange(16, dtype="<i4").tobytes()
+    spans = [(KIND_I32, 0, len(payload))]
+    with pytest.raises(ValueError, match="unknown codec"):
+        encode_block("zstd", payload, spans)
+    with pytest.raises(ValueError, match="unknown frame codec_id"):
+        decode_block(99, payload, spans, len(payload))
+    cid, blob = encode_block("delta", payload, spans)
+    with pytest.raises(ValueError):
+        decode_block(cid, blob[:-2], spans, len(payload))
+    with pytest.raises(ValueError, match="length mismatch"):
+        decode_block(CODEC_IDS["raw"], payload[:-4], spans,
+                       len(payload))
+
+
+# --------------------------------------------------------- store conformance
+@pytest.mark.parametrize("codec", ["delta", "f16"])
+def test_codec_store_serves_correctly(packed, tmp_path, codec):
+    """SSD/SSSP from a codec store: bit-identical under ``delta``
+    (lossless), within the documented eps under ``f16``."""
+    _, ix = packed
+    raw_dir, c_dir = str(tmp_path / "raw"), str(tmp_path / codec)
+    ix.save_store(raw_dir, block_bytes=1024)
+    ix.save_store(c_dir, block_bytes=1024, codec=codec)
+    assert segment_bytes(c_dir) < segment_bytes(raw_dir)
+
+    eng = QueryEngine(ix)
+    sources = np.array([3, 1, 4, 15, 92], dtype=np.int32)
+    budget = int(0.25 * segment_bytes(raw_dir))
+    store = IndexStore(c_dir, cache=PageCache(budget, policy="2q"))
+    seng = StreamingQueryEngine(store)
+    try:
+        dist = seng.ssd(sources)
+        if codec == "delta":
+            np.testing.assert_array_equal(eng.ssd(sources), dist)
+            d_m, p_m = eng.sssp(sources)
+            d_s, p_s = seng.sssp(sources)
+            np.testing.assert_array_equal(d_m, d_s)
+            np.testing.assert_array_equal(p_m, p_s)
+        else:
+            # per-edge narrowing error <= eps compounds along a path of
+            # at most n relaxations: a loose multiple of eps bounds it
+            assert np.allclose(dist, eng.ssd(sources), rtol=50 *
+                               F16_EPS_REL, equal_nan=True)
+        # decompress-on-fill accounting: the device and bytes_read
+        # meter compressed bytes, fills meter decompressed bytes
+        cs = store.cache.stats
+        io = store.device.stats
+        assert io.bytes_seq + io.bytes_rand == cs.bytes_read
+        assert cs.bytes_filled > cs.bytes_read
+        assert cs.bytes_filled == cs.misses * 1024
+    finally:
+        seng.close()
+
+
+def test_codec_store_same_budget_same_hit_sequence(packed, tmp_path):
+    """The logical block space is codec-independent, so at equal
+    decompressed budgets the raw and delta stores see the identical
+    hit/miss sequence — compression only changes bytes moved."""
+    _, ix = packed
+    raw_dir, d_dir = str(tmp_path / "raw"), str(tmp_path / "delta")
+    ix.save_store(raw_dir, block_bytes=1024)
+    ix.save_store(d_dir, block_bytes=1024, codec="delta")
+    budget = int(0.25 * segment_bytes(raw_dir))
+    sources = np.array([0, 7, 33], dtype=np.int32)
+    stats = {}
+    for name, path in (("raw", raw_dir), ("delta", d_dir)):
+        store = IndexStore(path, cache=PageCache(budget, policy="2q"))
+        seng = StreamingQueryEngine(store, prefetch=False)
+        try:
+            seng.ssd(sources)
+        finally:
+            seng.close()
+        stats[name] = store.cache.stats
+    assert stats["raw"].hits == stats["delta"].hits
+    assert stats["raw"].misses == stats["delta"].misses
+    assert stats["raw"].bytes_filled == stats["delta"].bytes_filled
+    assert stats["delta"].bytes_read < stats["raw"].bytes_read
+
+
+def test_segment_logical_bytes_is_codec_independent(packed, tmp_path):
+    """The cache-budget denominator must not shrink with the codec:
+    ``segment_logical_bytes`` (decompressed footprint) is identical for
+    raw and delta stores of the same index, while ``segment_bytes``
+    (on-disk) shrinks."""
+    from repro.storage import segment_logical_bytes
+    _, ix = packed
+    raw_dir, d_dir = str(tmp_path / "raw"), str(tmp_path / "delta")
+    ix.save_store(raw_dir, block_bytes=1024)
+    ix.save_store(d_dir, block_bytes=1024, codec="delta")
+    assert segment_logical_bytes(raw_dir) == segment_logical_bytes(d_dir)
+    assert segment_bytes(d_dir) < segment_bytes(raw_dir)
+    # the logical footprint is the data region: within header/footer +
+    # frame-header overhead of the raw on-disk size
+    assert (0.8 * segment_bytes(raw_dir) < segment_logical_bytes(raw_dir)
+            <= segment_bytes(raw_dir))
+
+
+def test_corrupt_codec_frame_raises_in_query_thread(packed, tmp_path):
+    """Bit flips inside a compressed frame must fail the frame CRC on
+    the next cache miss, not decode to garbage."""
+    _, ix = packed
+    path = str(tmp_path / "store")
+    ix.save_store(path, block_bytes=1024, codec="delta")
+    seg = os.path.join(path, "plan_f.seg")
+    with open(seg, "r+b") as f:
+        f.seek(1024 + 40)                   # inside the first frame
+        f.write(b"\xde\xad\xbe\xef")
+    seng = StreamingQueryEngine(IndexStore(path), prefetch=False)
+    try:
+        with pytest.raises(ValueError, match="CRC mismatch"):
+            seng.ssd(np.array([0], dtype=np.int32))
+    finally:
+        seng.close()

@@ -3,7 +3,6 @@ rule resolution, mesh-context training, dry-run cell builders."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 import repro.shardlib as sl
@@ -95,7 +94,6 @@ def test_lm_train_step_under_mesh():
 
 def test_cells_have_consistent_sharding_trees():
     """Abstract cells: in_shardings tree must match the args tree."""
-    import repro.launch.mesh as mesh_mod
     from repro.launch.steps import build_cell, rules_for
     mesh = make_smoke_mesh()
     for arch, shape in [("glm4-9b", "train_4k"),

@@ -1,7 +1,6 @@
 """The roofline's HLO analyzer: loop trip counts, collectives, dot flops."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze
 

@@ -10,7 +10,6 @@ jit-compiles, far beyond hypothesis's default per-example deadline.
 import numpy as np
 
 from hypsupport import given, settings, st
-
 from repro.core import (BuildConfig, QueryEngine, build_hod,  # noqa: E402
                         dijkstra_reference, from_edges)
 

@@ -3,9 +3,10 @@
 v2+ files persist the static-shape sweep plans (DESIGN.md §5); v1 files
 (chunk arrays only) must still load — rebuilding the plans on the fly
 with a warning — and answer identical queries.  v3 marks the store
-generation, v4 the affinity segment layout (same ``.npz`` keys both
-times; the disk-resident block store lives in `repro.storage` and is
-covered by tests/test_storage.py).
+generation, v4 the affinity segment layout, v5 the codec-framed
+segments (same ``.npz`` keys throughout; the disk-resident block store
+lives in `repro.storage` and is covered by tests/test_storage.py and
+tests/test_codecs.py).
 """
 import numpy as np
 import pytest
@@ -38,7 +39,7 @@ def test_saved_file_is_stamped_current_version(packed, tmp_path):
     path = str(tmp_path / "ix.npz")
     ix.save(path)
     with np.load(path) as z:
-        assert int(z["format_version"]) == FORMAT_VERSION == 4
+        assert int(z["format_version"]) == FORMAT_VERSION == 5
         for pre in ("pf", "pb", "pc"):
             for part in ("dst", "src", "w", "assoc", "valid", "mask"):
                 assert f"{pre}_{part}" in z.files
@@ -85,12 +86,12 @@ def test_legacy_v1_file_loads_with_warning_and_rebuilds(packed, tmp_path):
         HoDIndex.load(path)
 
 
-@pytest.mark.parametrize("version", [2, 3])
+@pytest.mark.parametrize("version", [2, 3, 4])
 def test_older_plan_file_still_loads_without_warning(packed, tmp_path,
                                                      version):
-    """v2/v3 files (plans serialized, pre-affinity stamps) load silently
-    and keep their plans — the store and affinity generations only
-    added formats."""
+    """v2/v3/v4 files (plans serialized, pre-codec stamps) load
+    silently and keep their plans — the store, affinity, and codec
+    generations only added formats."""
     _, ix = packed
     path = str(tmp_path / "ix.npz")
     old = str(tmp_path / f"ix_v{version}.npz")

@@ -1,9 +1,8 @@
 """Paper-rival baselines (VC-Index, EM-BFS, EM-Dijkstra) + the I/O model."""
 import numpy as np
 
-from repro.core import (BuildConfig, QueryEngine, build_hod,
-                        dijkstra_reference, gnm_random_digraph, pack_index,
-                        symmetrize)
+from repro.core import (BuildConfig, build_hod, dijkstra_reference,
+                        gnm_random_digraph, pack_index, symmetrize)
 from repro.core.baselines import VCIndex, em_bfs, em_dijkstra
 from repro.core.io_sim import BlockDevice, IOStats
 

@@ -1,5 +1,4 @@
 """Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -177,7 +177,6 @@ def test_gnn_chunked_equals_unchunked(arch):
         labels=jnp.asarray(rng.integers(0, 5, n), jnp.int32),
         train_mask=jnp.ones(n, bool))
     mod = GNN_MODULES[arch]
-    cfg_kw = dict(d_in=20)
     if arch == "gcn-cora":
         from repro.models.gnn.gcn import GCNConfig as C
         cfg = C(d_in=20, n_classes=5)

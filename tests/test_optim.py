@@ -3,9 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim import (ErrorFeedback, adamw_init, adamw_update,
-                         clip_by_global_norm, cosine_schedule,
-                         dequantize_int8, quantize_int8, topk_sparsify)
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, dequantize_int8, quantize_int8,
+                         topk_sparsify)
 
 KEY = jax.random.PRNGKey(0)
 

@@ -7,8 +7,8 @@ the in-memory engine, and the server's IOStats come from actual block
 reads (cache misses), not the synthetic charge path.
 """
 import os
-import threading
 import tempfile
+import threading
 
 import numpy as np
 import pytest
@@ -114,7 +114,7 @@ def test_pagecache_zero_capacity_disables_caching():
 def test_store_roundtrip_bitexact(packed, store_dir):
     _, ix = packed
     ix2 = HoDIndex.load(store_dir)            # dir -> load_store delegation
-    assert ix2.format_version == FORMAT_VERSION == 4
+    assert ix2.format_version == FORMAT_VERSION == 5
     np.testing.assert_array_equal(ix.perm, ix2.perm)
     np.testing.assert_array_equal(ix.f_w, ix2.f_w)
     np.testing.assert_array_equal(ix.core_closure, ix2.core_closure)
@@ -476,7 +476,52 @@ def test_abandoned_prefetch_future_is_drained(packed, store_dir):
         seng.close()
 
 
-# ------------------------------------------------------- v3 segment compat
+# --------------------------------------------------- v3/v4 segment compat
+def _forge_v4_segment(path, plan, sentinel, block_bytes):
+    """Replicate the PR-4 (v4) affinity segment writer: compact level
+    slabs back-to-back at byte granularity, per-block CRCs in the
+    footer, no codec frames."""
+    import json as _json
+    import struct as _struct
+    import zlib as _zlib
+    header_s = _struct.Struct("<8sIIIIIIIIQQ")
+    n_real = plan.n_real_levels
+    extents, slabs = [], []
+    off = block_bytes
+    for lvl in range(n_real):
+        valid = plan.row_valid[lvl]
+        m_real = int(valid.sum())
+        assert valid[:m_real].all() and not valid[m_real:].any()
+        assert (plan.dst[lvl, m_real:] == sentinel).all() and \
+            (np.isinf(plan.w[lvl, m_real:])).all()
+        sl = slice(0, m_real)
+        slab = b"".join((
+            np.ascontiguousarray(plan.dst[lvl, sl], np.int32).tobytes(),
+            np.ascontiguousarray(plan.src_idx[lvl, sl],
+                                 np.int32).tobytes(),
+            np.ascontiguousarray(plan.w[lvl, sl], np.float32).tobytes(),
+            np.ascontiguousarray(plan.assoc[lvl, sl],
+                                 np.int32).tobytes()))
+        extents.append([off, len(slab), m_real])
+        slabs.append(slab)
+        off += len(slab)
+    data = b"".join(slabs)
+    data += b"\0" * ((-len(data)) % block_bytes)
+    n_blocks = len(data) // block_bytes
+    crcs = [_zlib.crc32(data[i * block_bytes:(i + 1) * block_bytes])
+            for i in range(n_blocks)]
+    footer = _json.dumps({"extents": extents, "n_real": n_real,
+                          "crcs": crcs}).encode()
+    footer_off = block_bytes * (1 + n_blocks)
+    header = header_s.pack(b"HODSEG04", 4, block_bytes, n_real,
+                           plan.l_pad, plan.m_pad, plan.k_fix, sentinel,
+                           0, footer_off, len(footer))
+    with open(path, "wb") as f:
+        f.write(header.ljust(block_bytes, b"\0"))
+        f.write(data)
+        f.write(footer)
+
+
 def _forge_v3_segment(path, plan, sentinel, block_bytes):
     """Replicate the PR-3 (v3) block-aligned segment writer."""
     import json as _json
@@ -533,6 +578,71 @@ def test_v3_block_aligned_segments_still_load(packed, tmp_path):
                                       seng.ssd(sources))
     finally:
         seng.close()
+
+
+def test_v4_affinity_segments_still_load(packed, tmp_path):
+    """A store written by the PR-4 layout (compact affinity slabs,
+    footer CRCs, no codec frames) keeps loading bit-exactly through
+    the v5 reader."""
+    _, ix = packed
+    path = str(tmp_path / "store")
+    ix.save_store(path, block_bytes=1024)
+    for name in PLANS:
+        _forge_v4_segment(os.path.join(path, f"{name}.seg"),
+                          getattr(ix, name), ix.n, 1024)
+    ix2 = HoDIndex.load(path)
+    for field in PLANS:
+        a, b = getattr(ix, field), getattr(ix2, field)
+        for part in ("dst", "src_idx", "w", "assoc", "row_valid",
+                     "level_mask"):
+            np.testing.assert_array_equal(getattr(a, part),
+                                          getattr(b, part))
+
+
+def test_format_compat_matrix_v1_to_v5(packed, tmp_path):
+    """Every artifact generation next to a v5 store answers the same
+    queries bit-identically: v1/v2 ``.npz`` files, v3 block-aligned and
+    v4 affinity segments, and v5 ``raw``/``delta`` codec stores."""
+    g, ix = packed
+    sources = np.array([0, 7, 100], dtype=np.int32)
+    want = QueryEngine(ix).ssd(sources)
+
+    def check(ix_loaded):
+        np.testing.assert_array_equal(
+            QueryEngine(ix_loaded).ssd(sources), want)
+
+    # v1/v2 monolithic .npz
+    path = str(tmp_path / "ix.npz")
+    ix.save(path)
+    with np.load(path) as z:
+        full = {k: z[k] for k in z.files if k != "format_version"}
+    v1 = {k: v for k, v in full.items()
+          if k != "k_cap" and not k.startswith(("pf_", "pb_", "pc_"))}
+    np.savez_compressed(str(tmp_path / "v1.npz"), **v1)
+    with pytest.warns(UserWarning, match="old-format"):
+        check(HoDIndex.load(str(tmp_path / "v1.npz")))
+    np.savez_compressed(str(tmp_path / "v2.npz"),
+                        format_version=np.int64(2), **full)
+    check(HoDIndex.load(str(tmp_path / "v2.npz")))
+
+    # v3/v4/v5 stores (v3/v4 segments forged over a fresh store dir)
+    for version, forge in ((3, _forge_v3_segment),
+                           (4, _forge_v4_segment), (5, None)):
+        sdir = str(tmp_path / f"store_v{version}")
+        ix.save_store(sdir, block_bytes=1024)
+        if forge is not None:
+            for name in PLANS:
+                forge(os.path.join(sdir, f"{name}.seg"),
+                      getattr(ix, name), ix.n, 1024)
+        check(HoDIndex.load(sdir))
+        seng = StreamingQueryEngine(IndexStore(sdir), prefetch=False)
+        try:
+            np.testing.assert_array_equal(seng.ssd(sources), want)
+        finally:
+            seng.close()
+    delta_dir = str(tmp_path / "store_v5_delta")
+    ix.save_store(delta_dir, block_bytes=1024, codec="delta")
+    check(HoDIndex.load(delta_dir))
 
 
 # The hypothesis random-graph streaming-equivalence property lives in
