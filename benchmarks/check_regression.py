@@ -10,7 +10,12 @@ Compared per row, matched on stable keys:
   ``hit_rate`` must stay within ``--hit-rate-tol`` (default −5pp,
   *absolute*), and ``real_bytes`` (actual segment bytes read —
   compressed bytes on codec stores) must not grow by more than
-  ``--bytes-tol`` (default +10%).
+  ``--bytes-tol`` (default +10%);
+* ``workloads`` rows (key: ``workload`` — ``ssd`` / ``p2p`` /
+  ``mixed``, ISSUE-6) — same ``hit_rate`` / ``real_bytes`` checks as
+  store rows, plus ``cold_query_bytes`` (the cold single-query sweep
+  footprint, deterministic) must not grow past ``--bytes-tol``: a P2P
+  sweep that stops saving I/O over the full sweep fails here.
 
 Hit rate and bytes-read are deterministic for a fixed graph, layout,
 codec, and policy, so their tolerances only absorb intentional
@@ -96,6 +101,27 @@ def compare(baseline: dict, fresh: dict,
                 f"{name}: bytes read {got['real_bytes']} > "
                 f"{ceil:.0f} (baseline {row['real_bytes']} "
                 f"+ {bytes_tol:.0%})")
+
+    fresh_wl = {r["workload"]: r for r in fresh_t.get("workloads", ())}
+    for row in base_t.get("workloads", ()):
+        name = f"workloads[{row['workload']}]"
+        got = fresh_wl.get(row["workload"])
+        if got is None:
+            out.append(f"{name}: row missing from fresh run")
+            continue
+        floor = row["hit_rate"] - hit_rate_tol
+        if got["hit_rate"] < floor:
+            out.append(
+                f"{name}: hit rate {got['hit_rate']:.3f} < "
+                f"{floor:.3f} (baseline {row['hit_rate']:.3f} "
+                f"- {hit_rate_tol:.0%}pp)")
+        for field, label in (("real_bytes", "bytes read"),
+                             ("cold_query_bytes", "cold sweep bytes")):
+            ceil = (1.0 + bytes_tol) * row[field]
+            if got[field] > max(ceil, row[field]):
+                out.append(
+                    f"{name}: {label} {got[field]} > {ceil:.0f} "
+                    f"(baseline {row[field]} + {bytes_tol:.0%})")
     return out
 
 

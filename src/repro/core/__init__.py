@@ -2,7 +2,8 @@
 # shortcut index whose SSD/SSSP queries are pure linear scans, implemented
 # here as batched level-synchronous JAX sweeps (see DESIGN.md).
 from .build import BuildConfig, BuildResult, BuildStats, build_hod  # noqa: F401
-from .closeness import ClosenessResult, estimate_closeness  # noqa: F401
+from .closeness import (ClosenessResult, TopKCloseness,  # noqa: F401
+                        estimate_closeness, topk_closeness)
 from .graph import (Digraph, from_edges, gnm_random_digraph,  # noqa: F401
                     grid_road_graph, largest_weakly_connected_component,
                     power_law_digraph, symmetrize)

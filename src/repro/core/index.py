@@ -39,7 +39,8 @@ from .graph import Digraph
 __all__ = ["HoDIndex", "LevelBuckets", "SweepPlan", "build_sweep_plan",
            "build_core_plan", "level_buckets", "pack_index",
            "floyd_warshall_closure", "FORMAT_VERSION",
-           "scan_cost_bytes", "core_scan_bytes"]
+           "scan_cost_bytes", "core_scan_bytes",
+           "plan_level_ids", "node_levels"]
 
 INF = np.float32(np.inf)
 
@@ -236,6 +237,40 @@ def build_sweep_plan(ix: "HoDIndex", forward: bool,
     # l_align > 1 pads the level axis too: padding levels are all-padding
     # rows with level_mask=False, absorbed by the executor's masking.
     return _stack_levels(levels, k_cap, ix.n, l_align=4)
+
+
+def plan_level_ids(ix: "HoDIndex", forward: bool) -> np.ndarray:
+    """Graph level of each *real* plan level, in the plan's scan order.
+
+    ``build_sweep_plan`` drops empty levels, so plan level ``j`` is not
+    graph level ``j`` — this recovers the mapping from the (resident)
+    chunk arrays without materializing the plan, mirroring
+    :func:`build_sweep_plan`'s selection exactly: ascending non-empty
+    levels for the forward plan, descending for the backward plan.
+    This is the meet-node metadata the point-to-point / threshold query
+    modes use to skip provably-inert plan levels (DESIGN.md §7): a P2P
+    backward-label sweep for target ``t`` starts at ``t``'s level, a
+    forward sweep from ``s`` at ``s``'s level.
+    """
+    if forward:
+        key, w = ix.f_src.reshape(-1), ix.f_w.reshape(-1)
+    else:
+        key, w = ix.b_dst.reshape(-1), ix.b_w.reshape(-1)
+    key = key[np.isfinite(w)]
+    if key.size == 0:
+        return np.zeros(0, np.int32)
+    lvl = np.searchsorted(ix.level_ptr, key, side="right") - 1
+    present = np.unique(lvl).astype(np.int32)       # ascending
+    return present if forward else present[::-1].copy()
+
+
+def node_levels(ix: "HoDIndex", perm_ids: np.ndarray) -> np.ndarray:
+    """Graph level of each *permuted* node id (core nodes report
+    ``n_levels`` — above every removal level)."""
+    perm_ids = np.asarray(perm_ids)
+    lvl = (np.searchsorted(ix.level_ptr, perm_ids, side="right") - 1)
+    return np.where(perm_ids >= ix.n_noncore, ix.n_levels,
+                    lvl).astype(np.int32)
 
 
 def build_core_plan(ix: "HoDIndex", k_cap: int = 16) -> SweepPlan:

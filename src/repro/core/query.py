@@ -47,7 +47,7 @@ import numpy as np
 
 from .. import shardlib as sl
 from ..kernels.edge_relax.ops import relax_bucketed
-from .index import HoDIndex, SweepPlan
+from .index import HoDIndex, SweepPlan, node_levels, plan_level_ids
 
 __all__ = ["QueryEngine", "dijkstra_reference"]
 
@@ -131,6 +131,10 @@ class QueryEngine:
             self._ssd_impl, core_mode=self.core_mode), static_argnames=())
         self._sssp_jit = jax.jit(functools.partial(
             self._sssp_impl, core_mode=self.core_mode))
+        self._p2p_jit = jax.jit(functools.partial(
+            self._p2p_impl, core_mode=self.core_mode))
+        self._within_jit = jax.jit(functools.partial(
+            self._within_impl, core_mode=self.core_mode))
 
     def _init_engine(self, index: HoDIndex, core_mode: str,
                      use_pallas: bool, eps: float,
@@ -154,13 +158,21 @@ class QueryEngine:
 
         self._perm = jnp.asarray(index.perm)
         self._closure = jnp.asarray(index.core_closure)
+        # Meet-node metadata (DESIGN.md §7): the graph level behind each
+        # real plan level, in scan order — derived from the resident
+        # chunk arrays, so the store-backed engine gets it without
+        # materializing a plan.  P2P / threshold sweeps use it to skip
+        # provably-inert levels (everything below the query endpoints).
+        self._level_ids_f = plan_level_ids(index, forward=True)
+        self._level_ids_b = plan_level_ids(index, forward=False)
         # Dense core adjacency is only materialized for the mode that
         # scans it; closure/dijkstra engines skip the [C, C] build.
         self._core_adj = (jnp.asarray(_dense_core_adjacency(index))
                           if core_mode == "bellman" else None)
 
     # ------------------------------------------------------- plan executor
-    def _run_plan(self, state: jnp.ndarray, plan, level_body) -> jnp.ndarray:
+    def _run_plan(self, state: jnp.ndarray, plan, level_body,
+                  reverse: bool = False) -> jnp.ndarray:
         """THE sweep executor: one ``lax.scan`` over static plan levels.
 
         ``level_body(state, dst, src_idx, w, assoc, valid) -> state``
@@ -168,6 +180,9 @@ class QueryEngine:
         row-validity mask with the level mask already folded in, so
         padding rows and padding levels are inert regardless of the body.
         The scan body traces once — O(1) traces per sweep, not O(levels).
+        ``reverse=True`` scans the plan's levels back-to-front (the P2P
+        backward-label sweep walks ``plan_b`` in ascending rank order —
+        DESIGN.md §7) at the same single trace.
         """
         dst, src_idx, w, assoc, row_valid, level_mask = plan
         if dst.shape[0] == 0:
@@ -179,7 +194,8 @@ class QueryEngine:
                               l_valid & l_mask), None
 
         state, _ = jax.lax.scan(
-            body, state, (dst, src_idx, w, assoc, row_valid, level_mask))
+            body, state, (dst, src_idx, w, assoc, row_valid, level_mask),
+            reverse=reverse)
         return state
 
     def _run_plan_stream(self, state: jnp.ndarray, levels,
@@ -215,6 +231,36 @@ class QueryEngine:
                              use_pallas=self.use_pallas,
                              interpret=self.interpret)
         return dist.at[:, dst].min(new)
+
+    def _relax_level_rev(self, dlab, dst, src_idx, w, assoc, valid):
+        """Reverse relaxation for one level: backward *labels* (P2P mode,
+        DESIGN.md §7).  ``dlab[u]`` is the shortest strictly-descending
+        distance from ``u`` to the query target, so each backward edge
+        ``(x -> v, w)`` is relaxed against its direction:
+        ``dlab[x] = min(dlab[x], w + dlab[v])``.  Gather at ``dst`` (the
+        level-defining node, final once its level is reached scanning
+        ``plan_b`` in reverse = ascending rank), scatter-min into the
+        higher-rank ``src_idx`` slots.  Padding slots carry ``+inf``
+        weight and sentinel sources — absorbing, as in the forward body.
+        """
+        del assoc
+        cand = dlab[:, dst][:, :, None] + w[None]        # [S, M, K]
+        cand = jnp.where(valid[None, :, None], cand, INF)
+        return dlab.at[:, src_idx].min(cand)
+
+    def _relax_level_thresh(self, d):
+        """:meth:`_relax_level` with the distance-threshold mask folded
+        into the scan body (DESIGN.md §7): any label that exceeds ``d``
+        is snapped back to ``+inf`` *inside the sweep*, so it can never
+        seed further relaxations.  Sound because weights are positive —
+        every prefix of a path with total length ``<= d`` is itself
+        ``<= d`` — and exactly what lets the streaming engine skip
+        whole levels whose source values are all masked."""
+        def body(dist, dst, src_idx, w, assoc, valid):
+            dist = self._relax_level(dist, dst, src_idx, w, assoc, valid)
+            return jnp.where(dist <= d, dist, INF)
+
+        return body
 
     def _recon_level(self, pred, dist, dst, src_idx, w, assoc, valid):
         """SSSP predecessor reconstruction for one level (§6): scatter
@@ -269,23 +315,62 @@ class QueryEngine:
                 dc = _minplus_blocked(dc, self._closure)
         return jax.lax.dynamic_update_slice_in_dim(dist, dc, lo, axis=1)
 
+    def _init_state(self, nodes_perm: jnp.ndarray) -> jnp.ndarray:
+        """[S, n_pad] all-+inf label state with 0 at each row's node.
+        Sources are embarrassingly parallel: under an active mesh whose
+        rules bind "batch", the state shards over devices and every
+        sweep runs data-parallel (no-op without a mesh)."""
+        s = nodes_perm.shape[0]
+        state = jnp.full((s, self.index.n_pad), INF, jnp.float32)
+        state = state.at[jnp.arange(s), nodes_perm].set(0.0)
+        return sl.shard(state, "batch", None)
+
+    def _forward_core(self, sources_perm: jnp.ndarray, core_mode: str,
+                      level_body=None) -> jnp.ndarray:
+        """Forward search (§5.1) + core search (§5.2): the shared first
+        two phases of SSD, P2P, and threshold queries."""
+        dist = self._init_state(sources_perm)
+        dist = self._run_plan(dist, self._plan_f,
+                              level_body or self._relax_level)
+        if core_mode != "dijkstra":
+            dist = self._core_update(dist, core_mode)
+        return dist
+
     def _ssd_impl(self, sources_perm: jnp.ndarray,
                   core_mode: str) -> jnp.ndarray:
-        ix = self.index
-        s = sources_perm.shape[0]
-        dist = jnp.full((s, ix.n_pad), INF, jnp.float32)
-        dist = dist.at[jnp.arange(s), sources_perm].set(0.0)
-        # Sources are embarrassingly parallel: under an active mesh whose
-        # rules bind "batch", the [S, n_pad] state shards over devices and
-        # every sweep below runs data-parallel (no-op without a mesh).
-        dist = sl.shard(dist, "batch", None)
-        dist = self._run_plan(dist, self._plan_f,       # forward search (§5.1)
-                              self._relax_level)
-        if core_mode != "dijkstra":
-            dist = self._core_update(dist, core_mode)   # core search    (§5.2)
+        dist = self._forward_core(sources_perm, core_mode)
         dist = self._run_plan(dist, self._plan_b,       # backward search(§5.3)
                               self._relax_level)
         return dist
+
+    def _p2p_impl(self, sources_perm: jnp.ndarray, targets_perm: jnp.ndarray,
+                  core_mode: str) -> jnp.ndarray:
+        """Meet-in-the-middle P2P distances (DESIGN.md §7).
+
+        Forward labels of ``s`` (forward sweep + core search — exactly
+        the SSD front half) meet backward labels of ``t`` (``plan_b``
+        scanned in *reverse* = ascending rank with the reversed level
+        body), and ``dist(s, t) = min_m fwd[m] + bwd[m]``: by the arch
+        property (Theorem 1) every shortest path ascends, optionally
+        crosses the core — folded into ``fwd`` by the core search — and
+        descends, so some node ``m`` on it carries both labels."""
+        fwd = self._forward_core(sources_perm, core_mode)
+        bwd = self._init_state(targets_perm)
+        bwd = self._run_plan(bwd, self._plan_b, self._relax_level_rev,
+                             reverse=True)
+        return jnp.min(fwd + bwd, axis=1)
+
+    def _within_impl(self, sources_perm: jnp.ndarray, d: jnp.ndarray,
+                     core_mode: str) -> jnp.ndarray:
+        """Distance-threshold SSD (DESIGN.md §7): the full sweep pipeline
+        with the ``<= d`` mask applied inside every scan body, so labels
+        past the threshold die where they arise instead of being
+        filtered at the end — the masked levels are what the streaming
+        engine skips reading entirely."""
+        body = self._relax_level_thresh(d)
+        dist = self._forward_core(sources_perm, core_mode, level_body=body)
+        dist = jnp.where(dist <= d, dist, INF)          # mask core output
+        return self._run_plan(dist, self._plan_b, body)
 
     def _sssp_impl(self, sources_perm: jnp.ndarray, core_mode: str):
         ix = self.index
@@ -333,6 +418,46 @@ class QueryEngine:
         pred = np.asarray(pred)[:, self.index.perm]
         return dist, pred
 
+    def p2p(self, sources: np.ndarray, targets: np.ndarray) -> np.ndarray:
+        """Point-to-point distances ``dist(sources[i], targets[i])``
+        (meet-in-the-middle, DESIGN.md §7) — a ``[S]`` float32 vector.
+
+        Exact: bit-identical to ``ssd(sources)[i, targets[i]]`` (the
+        meet combine and the backward sweep compose the same (min, +)
+        sums over the same augmented edges).
+        """
+        sources = np.asarray(sources, dtype=np.int32)
+        targets = np.asarray(targets, dtype=np.int32)
+        src_perm = self.index.perm[sources]
+        tgt_perm = self.index.perm[targets]
+        if self.core_mode == "dijkstra":
+            fwd = self._dijkstra_forward_core(src_perm)
+            bwd = self._init_state(jnp.asarray(tgt_perm))
+            bwd = self._run_plan(bwd, self._plan_b, self._relax_level_rev,
+                                 reverse=True)
+            return np.asarray(jnp.min(jnp.asarray(fwd) + bwd, axis=1))
+        return np.asarray(self._p2p_jit(jnp.asarray(src_perm),
+                                        jnp.asarray(tgt_perm)))
+
+    def ssd_within(self, sources: np.ndarray, d: float) -> np.ndarray:
+        """Distance-threshold query (DESIGN.md §7): distances from each
+        source in original node order, with every entry beyond ``d``
+        masked to ``+inf`` — nodes within the threshold carry exactly
+        their SSD distance.  ``d`` is a traced operand, so changing the
+        threshold never recompiles."""
+        sources = np.asarray(sources, dtype=np.int32)
+        src_perm = self.index.perm[sources]
+        if self.core_mode == "dijkstra":
+            body = self._relax_level_thresh(jnp.float32(d))
+            dist = self._init_state(jnp.asarray(src_perm))
+            dist = self._run_plan(dist, self._plan_f, body)
+            dist = self._core_dijkstra_host(np.array(dist))
+            dist = jnp.where(jnp.asarray(dist) <= d, jnp.asarray(dist), INF)
+            dist = self._run_plan(dist, self._plan_b, body)
+        else:
+            dist = self._within_jit(jnp.asarray(src_perm), jnp.float32(d))
+        return np.asarray(dist)[:, self.index.perm]
+
     def paths(self, sources: np.ndarray, targets: np.ndarray) -> list:
         """Unfold predecessors into explicit node paths (one per source)."""
         dist, pred = self.sssp(sources)
@@ -377,17 +502,19 @@ class QueryEngine:
             dist[i, lo:lo + c] = dc
         return dist
 
+    def _dijkstra_forward_core(self, sources_perm: np.ndarray) -> np.ndarray:
+        """Forward plan sweep (JAX) -> host heap Dijkstra on G_c: the
+        shared front half of the paper-faithful SSD and P2P pipelines."""
+        dist = self._init_state(jnp.asarray(sources_perm))
+        dist = np.array(self._run_plan(dist, self._plan_f,
+                                       self._relax_level))  # writable copy
+        return self._core_dijkstra_host(dist)
+
     def _dijkstra_path(self, sources_perm: np.ndarray) -> np.ndarray:
         """Forward plan sweep (JAX) -> host heap Dijkstra on G_c ->
         backward plan sweep (JAX): the literal §5 pipeline, used as a
         validation mode."""
-        ix = self.index
-        s = sources_perm.shape[0]
-        dist = jnp.full((s, ix.n_pad), INF, jnp.float32)
-        dist = dist.at[jnp.arange(s), jnp.asarray(sources_perm)].set(0.0)
-        dist = np.array(self._run_plan(dist, self._plan_f,
-                                       self._relax_level))  # writable copy
-        dist = self._core_dijkstra_host(dist)
+        dist = self._dijkstra_forward_core(sources_perm)
         return np.asarray(self._run_plan(jnp.asarray(dist), self._plan_b,
                                          self._relax_level))
 

@@ -1,4 +1,4 @@
-"""Batched HoD query serving (DESIGN.md §7): async request coalescing,
+"""Batched HoD query serving (DESIGN.md §8): async request coalescing,
 fixed jit batch shapes, an LRU source-row cache, and disk cost — modeled
 for in-memory engines, *measured* for store-backed ones.
 
@@ -9,7 +9,7 @@ traffic scale — many independent clients, each asking for one source.
 stream, coalesces sources into fixed-size batches (padding to the jit'd
 batch shape so no request triggers a recompile), answers repeats from an
 LRU cache of recent source rows, and accounts each batch's index scan
-through the block-I/O model (DESIGN.md §8) — one scan of F_f + core +
+through the block-I/O model (DESIGN.md §9) — one scan of F_f + core +
 F_b *per batch*, which is exactly the amortization HoD's sweep
 structure buys (every source in the batch shares the scan).
 
@@ -31,6 +31,10 @@ Two index residency modes (DESIGN.md §6):
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 32
     PYTHONPATH=src python -m repro.launch.serve --store --cache-frac 0.05
     PYTHONPATH=src python -m repro.launch.serve --store --codec delta
+    PYTHONPATH=src python -m repro.launch.serve --store --mode p2p
+    PYTHONPATH=src python -m repro.launch.serve --mode threshold \
+        --threshold 8
+    PYTHONPATH=src python -m repro.launch.serve --store --mode topk --k 10
 """
 from __future__ import annotations
 
@@ -57,7 +61,9 @@ class QueryResult:
 
     source: int
     dist: np.ndarray                    # [n] distances, original node order
+    #                                     (p2p mode: a scalar distance)
     pred: Optional[np.ndarray] = None   # [n] predecessors (SSSP mode only)
+    target: Optional[int] = None        # p2p mode: the other endpoint
     latency_s: float = 0.0              # submit -> answer (includes waiting)
     batched_with: int = 1               # real requests sharing the batch
     cached: bool = False                # answered from the LRU cache
@@ -101,18 +107,35 @@ class BatchIO:
 
 
 class QueryServer:
-    """Coalesces SSD/SSSP requests into fixed-size batched sweeps.
+    """Coalesces HoD query requests into fixed-size batched sweeps.
 
-    Every batch runs at exactly ``batch_size`` sources — short batches are
-    padded by repeating the last source — so the engine compiles one
-    batch shape once.  ``max_wait_ms`` bounds how long a lone request waits
-    for co-riders before a partial batch is flushed anyway.
+    Every batch runs at exactly ``batch_size`` requests — short batches
+    are padded by repeating the last request — so the engine compiles one
+    batch shape once.  ``max_wait_ms`` bounds how long a lone request
+    waits for co-riders before a partial batch is flushed anyway.
+
+    ``mode`` picks the query type (DESIGN.md §7):
+
+    * ``"ssd"`` — full single-source distances (default; also what
+      ``sssp=False`` meant before modes existed);
+    * ``"sssp"`` — distances + predecessors (``sssp=True`` back-compat);
+    * ``"p2p"`` — point-to-point: requests are ``(source, target)``
+      pairs, answers are scalar distances.  Store-backed engines run the
+      meet-in-the-middle sweep, which reads strictly less than a full
+      SSD scan (its ``BatchIO.modeled_bytes`` stays the full-scan model,
+      so ``real_bytes`` visibly undercuts it);
+    * ``"within"`` — distances clamped to the server-level ``within_d``
+      threshold (labels past it are ``+inf``).
     """
+
+    MODES = ("ssd", "sssp", "p2p", "within")
 
     def __init__(self, engine: Optional[QueryEngine] = None,
                  batch_size: int = 32,
                  max_wait_ms: float = 2.0, cache_entries: int = 1024,
-                 sssp: bool = False, device: Optional[BlockDevice] = None,
+                 sssp: bool = False, mode: Optional[str] = None,
+                 within_d: float = float("inf"),
+                 device: Optional[BlockDevice] = None,
                  warm_start: bool = False,
                  store_path: Optional[str] = None,
                  cache_bytes: Optional[int] = None,
@@ -120,6 +143,12 @@ class QueryServer:
                  engine_opts: Optional[dict] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if mode is None:
+            mode = "sssp" if sssp else "ssd"
+        elif sssp and mode != "sssp":
+            raise ValueError(f"sssp=True contradicts mode={mode!r}")
+        if mode not in self.MODES:
+            raise ValueError(f"unknown mode {mode!r} (one of {self.MODES})")
         if engine is None:
             if store_path is None:
                 raise ValueError("pass an engine or a store_path")
@@ -145,13 +174,17 @@ class QueryServer:
         self.batch_size = int(batch_size)
         self.max_wait_ms = float(max_wait_ms)
         self.cache_entries = int(cache_entries)
-        self.sssp = bool(sssp)
+        self.mode = mode
+        self.sssp = mode == "sssp"
+        self.within_d = float(within_d)
         self.device = device or BlockDevice()
         self.stats = ServerStats()
         self.batch_io: List[BatchIO] = []
-        self._cache: "collections.OrderedDict[Tuple[bool, int], tuple]" = \
+        # Cache / pending keys are ints (one source) or (source, target)
+        # tuples (p2p), namespaced by mode.
+        self._cache: "collections.OrderedDict[tuple, tuple]" = \
             collections.OrderedDict()
-        self._pending: List[Tuple[int, asyncio.Future, float]] = []
+        self._pending: List[Tuple[object, asyncio.Future, float]] = []
         self._timer: Optional[asyncio.Task] = None
         self._last_batch_bytes = 0.0    # real (store) or modeled (in-mem)
 
@@ -180,33 +213,46 @@ class QueryServer:
             self.warmup()
 
     # ------------------------------------------------------------- internals
-    def _cache_get(self, source: int):
-        key = (self.sssp, source)
+    def _keys(self, requests: np.ndarray) -> List:
+        """Hashable request identities: ints, or (source, target) pairs."""
+        if requests.ndim == 2:
+            return [(int(s), int(t)) for s, t in requests]
+        return [int(s) for s in requests]
+
+    def _cache_get(self, req):
+        key = (self.mode, req)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
         return hit
 
-    def _cache_put(self, source: int, row: tuple) -> None:
+    def _cache_put(self, req, row: tuple) -> None:
         if self.cache_entries <= 0:
             return
-        key = (self.sssp, source)
+        key = (self.mode, req)
         self._cache[key] = row
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_entries:
             self._cache.popitem(last=False)
 
-    def _execute(self, sources: np.ndarray) -> List[tuple]:
-        """Run one padded batch; returns one (dist, pred) row per source."""
-        fill = sources.shape[0]
-        batch = sources
+    def _execute(self, requests: np.ndarray) -> List[tuple]:
+        """Run one padded batch; returns one (dist, pred) row per request
+        (``requests`` is ``[B]`` sources, or ``[B, 2]`` pairs in p2p)."""
+        fill = requests.shape[0]
+        batch = requests
         if fill < self.batch_size:     # pad to the compiled shape
-            batch = np.pad(sources, (0, self.batch_size - fill), mode="edge")
+            pad = ((0, self.batch_size - fill),) + ((0, 0),) * (
+                requests.ndim - 1)
+            batch = np.pad(requests, pad, mode="edge")
         before = (self.store.cache.stats.snapshot()
                   if self.store is not None else None)
         t0 = time.perf_counter()
-        if self.sssp:
+        if self.mode == "sssp":
             dist, pred = self.engine.sssp(batch)
+        elif self.mode == "p2p":
+            dist, pred = self.engine.p2p(batch[:, 0], batch[:, 1]), None
+        elif self.mode == "within":
+            dist, pred = self.engine.ssd_within(batch, self.within_d), None
         else:
             dist, pred = self.engine.ssd(batch), None
         self.stats.busy_seconds += time.perf_counter() - t0
@@ -232,16 +278,21 @@ class QueryServer:
                 filled_bytes=delta.bytes_filled))
             self._last_batch_bytes = float(delta.bytes_read)
         rows = []
-        for i, s in enumerate(sources.tolist()):
-            row = (dist[i].copy(), None if pred is None else pred[i].copy())
-            self._cache_put(int(s), row)
+        for i, req in enumerate(self._keys(requests)):
+            if self.mode == "p2p":     # scalar answer per pair
+                row = (np.float32(dist[i]), None)
+            else:
+                row = (dist[i].copy(),
+                       None if pred is None else pred[i].copy())
+            self._cache_put(req, row)
             rows.append(row)
         return rows
 
     # ------------------------------------------------------------- sync path
     def warmup(self) -> None:
         """Trigger the one-and-only jit compile outside the latency path."""
-        self._execute(np.zeros(1, dtype=np.int32))
+        shape = (1, 2) if self.mode == "p2p" else (1,)
+        self._execute(np.zeros(shape, dtype=np.int32))
         self.stats = ServerStats()
         self.batch_io.clear()
         self.device.reset()
@@ -251,57 +302,68 @@ class QueryServer:
             # resident (that is what a real warm start buys).
             self.store.cache.reset_stats()
 
-    def serve_stream(self, sources: np.ndarray) -> List[QueryResult]:
+    def serve_stream(self, requests: np.ndarray) -> List[QueryResult]:
         """Closed-loop driver: answer a request list in arrival order.
 
-        All requests of a chunk arrive together, so each one's
-        ``latency_s`` is the full chunk wall time (submit → answer, same
-        semantics as the async path) — divide by ``batched_with`` for the
-        amortized per-query cost.
+        ``requests`` is ``[N]`` sources — or ``[N, 2]`` (source, target)
+        rows in p2p mode.  All requests of a chunk arrive together, so
+        each one's ``latency_s`` is the full chunk wall time (submit →
+        answer, same semantics as the async path) — divide by
+        ``batched_with`` for the amortized per-query cost.
         """
-        sources = np.asarray(sources, dtype=np.int32)
+        requests = np.asarray(requests, dtype=np.int32)
+        if (requests.ndim == 2) != (self.mode == "p2p"):
+            raise ValueError("p2p mode takes [N, 2] (source, target) "
+                             "rows; other modes take [N] sources")
         out: List[QueryResult] = []
-        for lo in range(0, sources.shape[0], self.batch_size):
-            chunk = sources[lo: lo + self.batch_size]
+        for lo in range(0, requests.shape[0], self.batch_size):
+            chunk = requests[lo: lo + self.batch_size]
             t0 = time.perf_counter()
-            misses = sorted({int(s) for s in chunk.tolist()
-                             if self._cache_get(int(s)) is None})
-            miss_rows: Dict[int, tuple] = {}
+            misses = sorted({k for k in self._keys(chunk)
+                             if self._cache_get(k) is None})
+            miss_rows: Dict[object, tuple] = {}
             if misses:
                 uniq = np.asarray(misses, dtype=np.int32)
-                for s, row in zip(misses, self._execute(uniq)):
-                    miss_rows[s] = row
+                for k, row in zip(misses, self._execute(uniq)):
+                    miss_rows[k] = row
             lat = time.perf_counter() - t0
             share = self._last_batch_bytes / len(misses) if misses else 0.0
-            charged = set()   # charge each missed source's share once
-            for s in chunk.tolist():
-                cached = s not in miss_rows
-                row = miss_rows.get(s) or self._cache_get(s)
+            charged = set()   # charge each missed request's share once
+            for k in self._keys(chunk):
+                cached = k not in miss_rows
+                row = miss_rows.get(k) or self._cache_get(k)
                 self.stats.requests += 1
                 self.stats.cache_hits += cached
+                src, tgt = k if isinstance(k, tuple) else (k, None)
                 out.append(QueryResult(
-                    source=s, dist=row[0], pred=row[1],
+                    source=src, target=tgt, dist=row[0], pred=row[1],
                     latency_s=lat, batched_with=chunk.shape[0],
                     cached=cached,
-                    io_bytes=0.0 if (cached or s in charged) else share))
-                charged.add(s)
+                    io_bytes=0.0 if (cached or k in charged) else share))
+                charged.add(k)
         return out
 
     # ------------------------------------------------------------ async path
-    async def submit(self, source: int) -> QueryResult:
+    async def submit(self, source: int,
+                     target: Optional[int] = None) -> QueryResult:
         """Enqueue one request; resolves when its batch executes (or on a
-        cache hit, immediately)."""
-        source = int(source)
+        cache hit, immediately).  p2p mode requires ``target``."""
+        if (target is not None) != (self.mode == "p2p"):
+            raise ValueError("target is required in p2p mode and "
+                             "meaningless otherwise")
+        req = ((int(source), int(target)) if target is not None
+               else int(source))
         t0 = time.perf_counter()
-        hit = self._cache_get(source)
+        hit = self._cache_get(req)
         if hit is not None:
             self.stats.requests += 1
             self.stats.cache_hits += 1
-            return QueryResult(source=source, dist=hit[0], pred=hit[1],
+            return QueryResult(source=int(source), target=target,
+                               dist=hit[0], pred=hit[1],
                                latency_s=time.perf_counter() - t0,
                                cached=True)
         fut = asyncio.get_running_loop().create_future()
-        self._pending.append((source, fut, t0))
+        self._pending.append((req, fut, t0))
         if len(self._pending) >= self.batch_size:
             self._flush(include_partial=False)
         elif self._timer is None:
@@ -321,9 +383,9 @@ class QueryServer:
                                  or len(self._pending) >= self.batch_size):
             take, self._pending = (self._pending[: self.batch_size],
                                    self._pending[self.batch_size:])
-            srcs = np.asarray([s for s, _, _ in take], dtype=np.int32)
+            reqs = np.asarray([r for r, _, _ in take], dtype=np.int32)
             try:
-                rows = self._execute(srcs)
+                rows = self._execute(reqs)
             except Exception as exc:
                 # Never strand co-riders: a poisoned batch (e.g. an
                 # out-of-range source) fails every request in it.
@@ -333,11 +395,12 @@ class QueryServer:
                 continue
             share = self._last_batch_bytes / len(take)
             now = time.perf_counter()
-            for (s, fut, t0), row in zip(take, rows):
+            for (req, fut, t0), row in zip(take, rows):
                 self.stats.requests += 1
+                src, tgt = req if isinstance(req, tuple) else (req, None)
                 if not fut.done():
                     fut.set_result(QueryResult(
-                        source=s, dist=row[0], pred=row[1],
+                        source=src, target=tgt, dist=row[0], pred=row[1],
                         latency_s=now - t0, batched_with=len(take),
                         io_bytes=share))
         if self._pending and self._timer is None:
@@ -366,14 +429,16 @@ class QueryServer:
 
 
 # --------------------------------------------------------------------- CLI
-async def _open_loop(server: QueryServer, sources: np.ndarray,
+async def _open_loop(server: QueryServer, requests: np.ndarray,
                      rate: float, seed: int = 0) -> List[QueryResult]:
     """Poisson arrivals at `rate` req/s; returns per-request results."""
     rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate, sources.shape[0])
+    gaps = rng.exponential(1.0 / rate, requests.shape[0])
     tasks = []
-    for s, gap in zip(sources.tolist(), gaps.tolist()):
-        tasks.append(asyncio.create_task(server.submit(s)))
+    for r, gap in zip(requests.tolist(), gaps.tolist()):
+        coro = (server.submit(*r) if isinstance(r, list)
+                else server.submit(r))
+        tasks.append(asyncio.create_task(coro))
         await asyncio.sleep(gap)
     await server.drain()
     return list(await asyncio.gather(*tasks))
@@ -385,6 +450,15 @@ def main() -> None:
     ap.add_argument("--side", type=int, default=60)
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--mode", default="ssd",
+                    choices=["ssd", "p2p", "threshold", "topk"],
+                    help="query mode (DESIGN.md §7): full SSD sweeps, "
+                         "point-to-point pairs, distance-threshold "
+                         "queries, or exact top-k closeness")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="distance bound for --mode threshold")
+    ap.add_argument("--k", type=int, default=10,
+                    help="result count for --mode topk")
     ap.add_argument("--sssp", action="store_true")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--cache", type=int, default=1024)
@@ -412,6 +486,13 @@ def main() -> None:
                          "narrows weights within a documented eps "
                          "(DESIGN.md §6)")
     args = ap.parse_args()
+    if args.sssp and args.mode != "ssd":
+        ap.error("--sssp only combines with the default ssd mode")
+    # CLI "threshold" = server mode "within"; "topk" drives the engine
+    # directly through core.closeness (it is a batch job, not a stream).
+    server_mode = {"ssd": "sssp" if args.sssp else "ssd",
+                   "p2p": "p2p", "threshold": "within"}.get(args.mode,
+                                                            "ssd")
 
     g = (grid_road_graph(args.side) if args.graph == "road"
          else power_law_digraph(args.side * args.side, 4, weighted=True))
@@ -437,25 +518,33 @@ def main() -> None:
               f"{budget} bytes = {args.cache_frac:.0%} of the "
               f"decompressed segments)")
         server = QueryServer(store_path=store_dir, cache_bytes=budget,
-                             batch_size=args.batch, sssp=args.sssp,
+                             batch_size=args.batch, mode=server_mode,
+                             within_d=args.threshold,
                              cache_entries=args.cache,
                              max_wait_ms=args.max_wait_ms,
                              cache_policy=args.cache_policy,
                              engine_opts={"use_pallas": args.use_pallas})
     else:
         eng = QueryEngine(ix, use_pallas=args.use_pallas)
-        server = QueryServer(eng, batch_size=args.batch, sssp=args.sssp,
+        server = QueryServer(eng, batch_size=args.batch, mode=server_mode,
+                             within_d=args.threshold,
                              cache_entries=args.cache,
                              max_wait_ms=args.max_wait_ms)
 
     rng = np.random.default_rng(0)
-    sources = rng.integers(0, g.n, args.requests).astype(np.int32)
+    shape = ((args.requests, 2) if args.mode == "p2p"
+             else (args.requests,))
+    requests = rng.integers(0, g.n, shape).astype(np.int32)
 
     def drive():
         server.warmup()
+        if args.mode == "topk":
+            from ..core import topk_closeness
+            return topk_closeness(server.engine, k=args.k,
+                                  batch_size=args.batch)
         if args.rate > 0:
-            return asyncio.run(_open_loop(server, sources, args.rate))
-        return server.serve_stream(sources)
+            return asyncio.run(_open_loop(server, requests, args.rate))
+        return server.serve_stream(requests)
 
     try:
         if args.data_parallel:
@@ -469,10 +558,29 @@ def main() -> None:
         else:
             results = drive()
 
-        lat = np.array([r.latency_s for r in results]) * 1e3
         st = server.stats
         io = server.modeled_io()
-        print(f"served {st.requests} {'SSSP' if args.sssp else 'SSD'} "
+        if args.mode == "topk":
+            tk = results
+            print(f"top-{tk.k} closeness: {tk.batches} batches, "
+                  f"{tk.pruned} candidates pruned mid-sweep, "
+                  f"{tk.query_seconds:.2f}s")
+            for v, c, f in zip(tk.nodes.tolist(), tk.closeness,
+                               tk.farness):
+                print(f"  node {v:>7}  closeness {c:.5f}  "
+                      f"farness {f:.1f}")
+            if server.store is not None:
+                cs = server.store.cache.stats
+                total = cs.hits + cs.misses
+                print(f"page cache: hit rate "
+                      f"{cs.hits / max(total, 1):.1%} "
+                      f"({cs.hits} hits / {cs.misses} misses), "
+                      f"{cs.bytes_read/1e6:.2f} MB read")
+            return
+        lat = np.array([r.latency_s for r in results]) * 1e3
+        label = {"ssd": "SSD", "sssp": "SSSP", "p2p": "P2P",
+                 "within": f"within(d={args.threshold:g})"}[server_mode]
+        print(f"served {st.requests} {label} "
               f"requests in {st.batches} batches (batch={args.batch}, "
               f"{st.cache_hits} cache hits, {st.padded_slots} padded slots)")
         print(f"latency: mean {lat.mean():.2f} ms  "

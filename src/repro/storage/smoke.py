@@ -19,7 +19,10 @@ Asserts the ISSUE-3/4/5 acceptance criteria end to end:
   smaller segments on disk, fewer compressed bytes read, hit rate no
   worse than the raw store (the logical block space and the
   decompressed-byte budget are identical, so the access/hit sequence
-  is too), and answers still bit-identical.
+  is too), and answers still bit-identical;
+* store-backed P2P (ISSUE-6, DESIGN.md §7): served pair answers equal
+  the full SSD rows' entries, and a cold P2P sweep reads strictly
+  fewer bytes than a cold full sweep from the same source.
 
     PYTHONPATH=src python -m repro.storage.smoke
 """
@@ -108,6 +111,53 @@ def main() -> None:
         assert std.store_bytes_filled > std.store_bytes_read, \
             "decompress-on-fill accounting missing (filled <= read)"
 
+        # P2P smoke (ISSUE-6): serve pairs store-backed; answers must
+        # equal the full SSD rows' entries, the cache must still see
+        # real traffic, and a cold meet-in-the-middle sweep must read
+        # strictly fewer bytes than a cold full sweep.
+        targets = rng.choice(g.n, size=N_QUERIES,
+                             replace=False).astype(np.int32)
+        pairs = np.stack([sources, targets], axis=1)
+        p2p_server = QueryServer(store_path=store_dir,
+                                 cache_bytes=budget25, batch_size=8,
+                                 cache_entries=0, mode="p2p",
+                                 warm_start=True)
+        try:
+            p2p_results = p2p_server.serve_stream(pairs)
+        finally:
+            p2p_server.close()
+        for i, r in enumerate(p2p_results):
+            np.testing.assert_array_equal(
+                r.dist, np.float32(direct[i][targets[i]]))
+        stp = p2p_server.stats
+        assert stp.page_hits + stp.page_misses > 0, \
+            "p2p served without touching the page cache"
+        assert 0.0 < stp.page_hit_rate() <= 1.0
+
+        from . import IndexStore, PageCache, StreamingQueryEngine
+        cold = StreamingQueryEngine(IndexStore(store_dir,
+                                               cache=PageCache(0)),
+                                    prefetch=False)
+        try:
+            dev = cold.store.device.stats
+            # endpoints at level > 0, so both halves provably skip levels
+            from ..core.index import node_levels
+            lvl = node_levels(ix, np.arange(ix.n))[ix.perm]
+            mid = np.nonzero((lvl > 0) & (lvl < ix.n_levels))[0]
+            one_s = mid[:1].astype(np.int32)
+            one_t = mid[-1:].astype(np.int32)
+            base = dev.bytes_seq + dev.bytes_rand
+            cold.ssd(one_s)
+            ssd_bytes = dev.bytes_seq + dev.bytes_rand - base
+            base = dev.bytes_seq + dev.bytes_rand
+            cold.p2p(one_s, one_t)
+            p2p_bytes = dev.bytes_seq + dev.bytes_rand - base
+        finally:
+            cold.close()
+        assert 0 < p2p_bytes < ssd_bytes, \
+            f"p2p read {p2p_bytes} bytes, full sweep {ssd_bytes} — " \
+            "meet-in-the-middle is not saving I/O"
+
         print(f"storage smoke OK: {st.requests} queries from a "
               f"5% cache ({st.page_hit_rate():.1%} hit rate), "
               f"{st.store_bytes_read/1e6:.2f} MB actually read "
@@ -119,7 +169,10 @@ def main() -> None:
               f"{std.store_bytes_read/1e6:.2f} vs "
               f"{st25.store_bytes_read/1e6:.2f} MB read, "
               f"hit rate {std.page_hit_rate():.1%}, "
-              f"answers bit-identical to the in-memory engine")
+              f"answers bit-identical to the in-memory engine; "
+              f"p2p: {stp.requests} pairs served "
+              f"({stp.page_hit_rate():.1%} hit rate), cold sweep "
+              f"{p2p_bytes/1e3:.0f} KB vs {ssd_bytes/1e3:.0f} KB full")
 
 
 if __name__ == "__main__":

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import shardlib as sl
+from ..core.index import node_levels
 from ..core.query import INF, QueryEngine
 from .blockfile import IndexStore
 
@@ -94,6 +95,29 @@ class StreamingQueryEngine(QueryEngine):
             lambda pred, dist, dst, src, w, assoc, valid:
             self._recon_level(pred, dist, dst, src, w, assoc, valid),
             donate_argnums=0)
+        # Query-mode steps (DESIGN.md §7).  Same O(1)-trace discipline:
+        # each jits once per slab shape; the threshold ``d`` and the
+        # range/cut bounds are *operands*, not closure constants, so a
+        # new query never re-traces.
+        self._relax_rev_step = jax.jit(
+            lambda dlab, dst, src, w, assoc, valid:
+            self._relax_level_rev(dlab, dst, src, w, assoc, valid),
+            donate_argnums=0)
+        self._thresh_step = jax.jit(
+            lambda dist, d, dst, src, w, assoc, valid: jnp.where(
+                (r := self._relax_level(dist, dst, src, w, assoc,
+                                        valid)) <= d, r, INF),
+            donate_argnums=0)
+        self._meet_min = jax.jit(
+            lambda fwd, bwd: jnp.min(fwd + bwd, axis=1))
+        self._suffix_min = jax.jit(
+            lambda fwd, cut: jnp.min(jnp.where(
+                jnp.arange(fwd.shape[1])[None, :] >= cut, fwd, INF),
+                axis=1))
+        self._range_live = jax.jit(
+            lambda dist, lo, hi: jnp.any(jnp.isfinite(dist) & (
+                jnp.arange(dist.shape[1])[None, :] >= lo) & (
+                jnp.arange(dist.shape[1])[None, :] < hi)))
         self._pool = (concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="hod-prefetch")
             if self.prefetch else None)
@@ -151,18 +175,21 @@ class StreamingQueryEngine(QueryEngine):
         dist = dist.at[jnp.arange(s), jnp.asarray(sources_perm)].set(0.0)
         return sl.shard(dist, "batch", None)
 
+    def _apply_core(self, dist: jnp.ndarray) -> jnp.ndarray:
+        if not self.index.n_core:
+            return dist
+        if self.core_mode == "dijkstra":
+            # Paper-faithful host heap over the resident core CSR —
+            # the same shared helper the in-memory validation mode
+            # uses (QueryEngine._core_dijkstra_host).
+            return jnp.asarray(self._core_dijkstra_host(np.array(dist)))
+        return self._core_jit(dist)
+
     def _ssd_stream(self, sources_perm: np.ndarray,
                     pin: bool = False) -> jnp.ndarray:
         dist = self._init_dist(sources_perm)
         dist = self._sweep(dist, "plan_f", self._relax_step, pin=pin)
-        if self.index.n_core:
-            if self.core_mode == "dijkstra":
-                # Paper-faithful host heap over the resident core CSR —
-                # the same shared helper the in-memory validation mode
-                # uses (QueryEngine._core_dijkstra_host).
-                dist = jnp.asarray(self._core_dijkstra_host(np.array(dist)))
-            else:
-                dist = self._core_jit(dist)
+        dist = self._apply_core(dist)
         return self._sweep(dist, "plan_b", self._relax_step, pin=pin)
 
     def _unpin_plan(self, name: str) -> None:
@@ -199,6 +226,136 @@ class StreamingQueryEngine(QueryEngine):
         dist = np.asarray(dist)[:, self.index.perm]
         pred = np.asarray(pred)[:, self.index.perm]
         return dist, pred
+
+    # -------------------------------------------- bounded sweeps (§7)
+    def _read(self, name: str, lvl: int):
+        """One level slab, read synchronously (bounded sweeps bypass the
+        prefetch thread so a skip / early exit provably skips the I/O,
+        not just the compute)."""
+        return tuple(jnp.asarray(a)
+                     for a in self.store.read_level(name, lvl))
+
+    def p2p(self, sources: np.ndarray, targets: np.ndarray,
+            early_term: bool = True) -> np.ndarray:
+        """Point-to-point distances ``dist(sources[i], targets[i])`` by
+        meet-in-the-middle (DESIGN.md §7), reading strictly less than a
+        full SSD sweep:
+
+        * the forward half skips every ``plan_f`` level below the
+          lowest source level (labels there are provably still +inf);
+        * the backward-label half walks ``plan_b`` in *reverse* scan
+          order (ascending rank), skips its tail below the lowest
+          target level, and — with ``early_term`` — stops as soon as
+          every row's best meeting distance is <= the suffix-min of its
+          (final) forward labels over the ids future levels can still
+          touch: backward labels are nonnegative, so no later meet can
+          beat the bound.  ``early_term=False`` reads every kept level;
+          answers are bit-identical either way.
+        """
+        sources = np.asarray(sources, dtype=np.int32)
+        targets = np.asarray(targets, dtype=np.int32)
+        ix = self.index
+        src_perm = ix.perm[sources]
+        tgt_perm = ix.perm[targets]
+        lvl_s = int(node_levels(ix, src_perm).min())
+        lvl_t = int(node_levels(ix, tgt_perm).min())
+
+        fwd = self._init_dist(src_perm)
+        start_f = int(np.searchsorted(self._level_ids_f, lvl_s,
+                                      side="left"))
+        for lvl in range(start_f, self.store.n_real("plan_f")):
+            fwd = self._relax_step(fwd, *self._read("plan_f", lvl))
+        fwd = self._apply_core(fwd)
+
+        bwd = self._init_dist(tgt_perm)
+        best = self._meet_min(fwd, bwd)
+        keep = np.nonzero(self._level_ids_b >= lvl_t)[0]
+        for j in (range(int(keep.max()), -1, -1) if keep.size else ()):
+            bwd = self._relax_rev_step(bwd, *self._read("plan_b", j))
+            best = self._meet_min(fwd, bwd)
+            if early_term and j > 0:
+                cut = int(ix.level_ptr[int(self._level_ids_b[j - 1])])
+                if bool(jnp.all(best <= self._suffix_min(fwd, cut))):
+                    break
+        return np.asarray(best)
+
+    def ssd_within(self, sources: np.ndarray, d: float) -> np.ndarray:
+        """All distances ``<= d`` (rest ``+inf``), original node order.
+
+        The threshold body clamps labels past ``d`` inside every level
+        step, so a level whose *gather range* holds no finite label is
+        provably inert — the sweep skips its reads entirely.  Forward
+        level ``g`` gathers its own level's ids
+        ``[level_ptr[g], level_ptr[g+1])``; backward level ``g``
+        gathers strictly-higher ranks ``>= level_ptr[g+1]``.
+        """
+        sources = np.asarray(sources, dtype=np.int32)
+        ix = self.index
+        lp = ix.level_ptr
+        d = jnp.float32(d)
+        dist = self._init_dist(ix.perm[sources])
+        dist = jnp.where(dist <= d, dist, INF)   # d < 0: nothing survives
+        for lvl in range(self.store.n_real("plan_f")):
+            g = int(self._level_ids_f[lvl])
+            if not bool(self._range_live(dist, int(lp[g]),
+                                         int(lp[g + 1]))):
+                continue
+            dist = self._thresh_step(dist, d, *self._read("plan_f", lvl))
+        dist = self._apply_core(dist)
+        dist = jnp.where(dist <= d, dist, INF)   # mask core output
+        for lvl in range(self.store.n_real("plan_b")):
+            g = int(self._level_ids_b[lvl])
+            if not bool(self._range_live(dist, int(lp[g + 1]),
+                                         dist.shape[1])):
+                continue
+            dist = self._thresh_step(dist, d, *self._read("plan_b", lvl))
+        return np.asarray(dist)[:, ix.perm]
+
+    def _far_slice(self, dist: jnp.ndarray, lo: int,
+                   hi: int) -> np.ndarray:
+        """Per-row farness contribution of perm-id columns [lo, hi) —
+        summed on the host in float64 so integer-valued distances
+        accumulate exactly (the top-k prune must never overshoot)."""
+        d = np.asarray(dist[:, lo:hi])
+        return np.where(np.isfinite(d), d, 0.0).sum(axis=1,
+                                                    dtype=np.float64)
+
+    def ssd_bounded(self, sources: np.ndarray, threshold: float
+                    ) -> Tuple[Optional[np.ndarray], bool]:
+        """SSD that may abandon mid-backward-sweep once every row's
+        farness provably exceeds ``threshold`` (the top-k closeness
+        prune, DESIGN.md §7).
+
+        The backward sweep finalizes labels level by level descending:
+        after the level at graph level ``g``, every id ``>=
+        level_ptr[g]`` is final (later levels only scatter lower).  The
+        running sum of finite finalized distances is therefore a lower
+        bound on each row's farness; when it exceeds ``threshold`` for
+        every row the remaining levels go unread.  Returns
+        ``(dist_in_original_order, True)`` for a completed sweep —
+        bit-identical to :meth:`ssd` — or ``(None, False)``.
+        """
+        sources = np.asarray(sources, dtype=np.int32)
+        ix = self.index
+        lp = ix.level_ptr
+        dist = self._init_dist(ix.perm[sources])
+        for lvl in range(self.store.n_real("plan_f")):
+            dist = self._relax_step(dist, *self._read("plan_f", lvl))
+        dist = self._apply_core(dist)
+        nb = self.store.n_real("plan_b")
+        if nb:
+            cut = int(lp[int(self._level_ids_b[0]) + 1])
+            far = self._far_slice(dist, cut, dist.shape[1])
+            if np.all(far > threshold):
+                return None, False
+            for lvl in range(nb):
+                dist = self._relax_step(dist, *self._read("plan_b", lvl))
+                new_cut = int(lp[int(self._level_ids_b[lvl])])
+                far += self._far_slice(dist, new_cut, cut)
+                cut = new_cut
+                if lvl + 1 < nb and np.all(far > threshold):
+                    return None, False
+        return np.asarray(dist)[:, ix.perm], True
 
     def close(self) -> None:
         if self._pool is not None:

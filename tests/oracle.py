@@ -1,0 +1,93 @@
+"""Pure-Python shortest-path oracle for differential testing.
+
+Deliberately shares *nothing* with the engine under test: adjacency
+lists built straight off the graph's CSR, a binary-heap Dijkstra in
+float64, and derived quantities (P2P, distance-threshold, farness,
+top-k closeness) computed from those distances the obvious way.  On
+integer edge weights (``gnm_random_digraph(weighted=True)`` draws
+1..10) every distance is an exact small integer, so the engine's f32
+sweeps must match the oracle's f64 heap *bit for bit* — the
+differential tests assert exact equality, not tolerance.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class ShortestPathOracle:
+    """Single-source truths for one digraph, memoized per source."""
+
+    def __init__(self, g):
+        self.n = int(g.n)
+        self.adj: List[List[Tuple[int, float]]] = [[] for _ in
+                                                   range(self.n)]
+        src, dst, w = g.edge_list()
+        for a, b, wt in zip(src.tolist(), dst.tolist(), w.tolist()):
+            self.adj[a].append((int(b), float(wt)))
+        self.edge_w: Dict[Tuple[int, int], float] = {
+            (int(a), int(b)): float(wt)
+            for a, b, wt in zip(src.tolist(), dst.tolist(), w.tolist())}
+        self._ssd_memo: Dict[int, List[float]] = {}
+
+    # ------------------------------------------------------------- queries
+    def ssd(self, s: int) -> List[float]:
+        s = int(s)
+        memo = self._ssd_memo.get(s)
+        if memo is not None:
+            return memo
+        dist = [math.inf] * self.n
+        dist[s] = 0.0
+        heap = [(0.0, s)]
+        while heap:
+            d, u = heapq.heappop(heap)
+            if d > dist[u]:
+                continue
+            for v, wt in self.adj[u]:
+                nd = d + wt
+                if nd < dist[v]:
+                    dist[v] = nd
+                    heapq.heappush(heap, (nd, v))
+        self._ssd_memo[s] = dist
+        return dist
+
+    def p2p(self, s: int, t: int) -> float:
+        return self.ssd(s)[int(t)]
+
+    def within(self, s: int, d: float) -> List[float]:
+        return [x if x <= d else math.inf for x in self.ssd(s)]
+
+    def farness(self, s: int) -> float:
+        return sum(x for x in self.ssd(s) if math.isfinite(x))
+
+    def topk_closeness(self, k: int,
+                       candidates: Optional[Sequence[int]] = None
+                       ) -> List[Tuple[float, int]]:
+        """The ``k`` smallest ``(farness, node)`` pairs, node id breaking
+        ties — the same convention as ``core.closeness.topk_closeness``."""
+        cand = range(self.n) if candidates is None else candidates
+        ranked = sorted((self.farness(int(v)), int(v)) for v in cand)
+        return ranked[:k]
+
+    # ------------------------------------------------------------ checkers
+    def check_sssp(self, s: int, dist, pred) -> None:
+        """Validate one SSSP row: distances exact, and predecessors
+        unfold into real-edge paths whose lengths telescope to ``dist``
+        (any shortest-path tree is admissible, so the *tree* is checked
+        for validity, not equality with a particular oracle tree)."""
+        want = self.ssd(s)
+        for v in range(self.n):
+            got = float(dist[v])
+            assert (got == want[v]) or (math.isinf(got)
+                                        and math.isinf(want[v])), \
+                f"dist[{v}] = {got}, oracle {want[v]}"
+            p = int(pred[v])
+            if v == s or math.isinf(want[v]):
+                assert p == -1, f"pred[{v}] = {p}, expected -1"
+                continue
+            assert p >= 0, f"reachable node {v} has no predecessor"
+            wt = self.edge_w.get((p, v))
+            assert wt is not None, f"pred edge ({p}, {v}) not in G"
+            assert want[p] + wt == want[v], \
+                f"pred edge ({p}, {v}) is not tight"

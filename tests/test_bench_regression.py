@@ -30,6 +30,14 @@ BASELINE = {
             {"codec": "delta", "cache_frac": 0.25, "policy": "2q",
              "hit_rate": 0.55, "real_bytes": 3_500_000},
         ],
+        "workloads": [
+            {"workload": "ssd", "cache_frac": 0.25, "policy": "2q",
+             "hit_rate": 0.56, "real_bytes": 6_800_000,
+             "cold_query_bytes": 3_900_000, "queries_per_s": 400.0},
+            {"workload": "p2p", "cache_frac": 0.25, "policy": "2q",
+             "hit_rate": 0.55, "real_bytes": 7_000_000,
+             "cold_query_bytes": 3_400_000, "queries_per_s": 330.0},
+        ],
         "cold_start": [{"load_s": 0.05}],
     },
 }
@@ -75,6 +83,35 @@ def test_missing_row_fails():
     violations = compare(BASELINE, fresh)
     assert len(violations) == 2
     assert all("missing" in v for v in violations)
+
+
+def test_missing_workload_row_fails():
+    """A fresh run that silently drops the P2P workload row (e.g. the
+    mode was disabled) must fail the gate (ISSUE-6)."""
+    fresh = copy.deepcopy(BASELINE)
+    del fresh["tables"]["workloads"][1]
+    violations = compare(BASELINE, fresh)
+    assert violations == ["workloads[p2p]: row missing from fresh run"]
+
+
+def test_cold_sweep_bytes_growth_fails():
+    """P2P losing its I/O edge — cold sweep footprint ballooning past
+    tolerance — is a gated regression, not a silent drift."""
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["workloads"][1]["cold_query_bytes"] = 3_900_000
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 1
+    assert "workloads[p2p]" in violations[0]
+    assert "cold sweep bytes" in violations[0]
+
+
+def test_workload_hit_rate_drop_fails():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["workloads"][0]["hit_rate"] = 0.40   # -16pp
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 1
+    assert "workloads[ssd]" in violations[0]
+    assert "hit rate" in violations[0]
 
 
 def test_extra_fresh_rows_are_ignored():

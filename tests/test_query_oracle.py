@@ -1,0 +1,213 @@
+"""Differential oracle harness for every query mode (DESIGN.md §7).
+
+Randomized directed, integer-weighted graphs run through both the
+engine under test and the pure-Python Dijkstra oracle
+(``tests/oracle.py``); agreement is asserted *exactly* — integer
+weights make every distance a small integer, representable without
+rounding in f32, f16, and the oracle's f64 alike.  Covered: full SSD
+rows, SSSP tree validity, point-to-point, distance-threshold, and
+top-k closeness; in-memory and store-backed at 5% / 25% page-cache
+budgets over the raw / delta / f16 codecs; plus the P2P
+early-termination I/O guarantee and the O(1)-trace accounting of the
+new mode bodies.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from hypsupport import given, settings, st
+from oracle import ShortestPathOracle
+from repro.core import (BuildConfig, QueryEngine, build_hod,
+                        gnm_random_digraph, pack_index, topk_closeness)
+from repro.core.index import node_levels
+from repro.kernels.edge_relax import ops
+from repro.storage import IndexStore, PageCache, StreamingQueryEngine
+
+# A small pool of prebuilt graphs: strategies draw (pool index, query
+# params), so randomized examples vary queries freely while index
+# builds amortize across every property in the module.
+POOL = ((40, 160, 1), (60, 300, 2), (90, 250, 3), (50, 450, 5))
+CFG = BuildConfig(max_core_nodes=16, max_core_edges=512, seed=0)
+_BUNDLES = {}
+
+
+def bundle(idx: int):
+    if idx not in _BUNDLES:
+        n, m, seed = POOL[idx]
+        g = gnm_random_digraph(n, m, seed=seed, weighted=True)
+        ix = pack_index(g, build_hod(g, CFG), chunk=32)
+        _BUNDLES[idx] = (g, ix, QueryEngine(ix), ShortestPathOracle(g))
+    return _BUNDLES[idx]
+
+
+graph_idx = st.integers(0, len(POOL) - 1)
+query_seed = st.integers(0, 2**31 - 1)
+
+
+def _nodes(rng: np.random.Generator, n: int, k: int) -> np.ndarray:
+    return rng.integers(0, n, size=k).astype(np.int32)
+
+
+# --------------------------------------------------------- in-memory modes
+@settings(max_examples=10, deadline=None)
+@given(graph_idx, query_seed)
+def test_ssd_matches_oracle(idx, seed):
+    g, _, eng, orc = bundle(idx)
+    sources = _nodes(np.random.default_rng(seed), g.n, 4)
+    dist = eng.ssd(sources)
+    for i, s in enumerate(sources.tolist()):
+        np.testing.assert_array_equal(dist[i, :g.n], orc.ssd(s))
+
+
+@settings(max_examples=6, deadline=None)
+@given(graph_idx, query_seed)
+def test_sssp_trees_are_valid(idx, seed):
+    g, _, eng, orc = bundle(idx)
+    sources = _nodes(np.random.default_rng(seed), g.n, 3)
+    dist, pred = eng.sssp(sources)
+    for i, s in enumerate(sources.tolist()):
+        orc.check_sssp(s, dist[i, :g.n], pred[i, :g.n])
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_idx, query_seed)
+def test_p2p_matches_oracle(idx, seed):
+    g, _, eng, orc = bundle(idx)
+    rng = np.random.default_rng(seed)
+    s, t = _nodes(rng, g.n, 6), _nodes(rng, g.n, 6)
+    got = eng.p2p(s, t)
+    want = [orc.p2p(a, b) for a, b in zip(s.tolist(), t.tolist())]
+    np.testing.assert_array_equal(got, np.array(want, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_idx, query_seed, st.integers(0, 20))
+def test_threshold_matches_oracle(idx, seed, d):
+    g, _, eng, orc = bundle(idx)
+    sources = _nodes(np.random.default_rng(seed), g.n, 4)
+    got = eng.ssd_within(sources, float(d))
+    for i, s in enumerate(sources.tolist()):
+        np.testing.assert_array_equal(got[i, :g.n], orc.within(s, d))
+
+
+@settings(max_examples=6, deadline=None)
+@given(graph_idx, st.integers(1, 12), query_seed)
+def test_topk_closeness_matches_oracle(idx, k, seed):
+    g, _, eng, orc = bundle(idx)
+    tk = topk_closeness(eng, k, batch_size=16, seed=seed)
+    want = orc.topk_closeness(k)
+    assert tk.nodes.tolist() == [v for _, v in want]
+    np.testing.assert_array_equal(tk.farness,
+                                  np.array([f for f, _ in want]))
+
+
+# ------------------------------------------------------- store-backed modes
+@pytest.fixture(scope="module", params=["raw", "delta", "f16"])
+def store_path(request, tmp_path_factory):
+    _, ix, _, _ = bundle(1)
+    path = os.path.join(tmp_path_factory.mktemp("oracle_store"),
+                        f"store_{request.param}")
+    ix.save_store(path, block_bytes=1024, codec=request.param)
+    return path
+
+
+@pytest.mark.parametrize("budget_frac", [0.05, 0.25])
+def test_store_backed_modes_match_oracle(store_path, budget_frac):
+    g, ix, eng, orc = bundle(1)
+    from repro.storage import segment_logical_bytes
+    budget = int(budget_frac * segment_logical_bytes(store_path))
+    seng = StreamingQueryEngine(
+        IndexStore(store_path, cache=PageCache(budget)))
+    try:
+        rng = np.random.default_rng(7)
+        s, t = _nodes(rng, g.n, 4), _nodes(rng, g.n, 4)
+        dist = seng.ssd(s)
+        for i, src in enumerate(s.tolist()):
+            np.testing.assert_array_equal(dist[i, :g.n], orc.ssd(src))
+        np.testing.assert_array_equal(
+            seng.p2p(s, t),
+            np.array([orc.p2p(a, b)
+                      for a, b in zip(s.tolist(), t.tolist())],
+                     np.float32))
+        within = seng.ssd_within(s, 9.0)
+        for i, src in enumerate(s.tolist()):
+            np.testing.assert_array_equal(within[i, :g.n],
+                                          orc.within(src, 9.0))
+        tk = topk_closeness(seng, 8, batch_size=16, seed=0)
+        want = orc.topk_closeness(8)
+        assert tk.nodes.tolist() == [v for _, v in want]
+        np.testing.assert_array_equal(tk.farness,
+                                      np.array([f for f, _ in want]))
+    finally:
+        seng.close()
+
+
+def test_p2p_reads_fewer_bytes_than_full_sweep(tmp_path):
+    """The meet-in-the-middle guarantee, measured: a store-backed P2P
+    query's actual block reads undercut the same source's full SSD
+    sweep, and disabling early termination never changes the answer."""
+    g, ix, _, orc = bundle(1)
+    path = os.path.join(tmp_path, "store")
+    ix.save_store(path, block_bytes=1024)
+    # capacity 0 disables caching: every level read hits the device, so
+    # byte deltas compare sweep footprints exactly.
+    store = IndexStore(path, cache=PageCache(0))
+    seng = StreamingQueryEngine(store, prefetch=False)
+    try:
+        def bytes_of(fn):
+            st0 = store.device.stats
+            before = st0.bytes_seq + st0.bytes_rand
+            out = fn()
+            return out, (st0.bytes_seq + st0.bytes_rand - before)
+
+        # endpoints at level > 0, so both halves provably skip levels
+        lvl = node_levels(ix, np.arange(ix.n))[ix.perm]
+        cand = np.nonzero((lvl > 0) & (lvl < ix.n_levels))[0]
+        s = cand[:2].astype(np.int32)
+        t = cand[-2:].astype(np.int32)
+        full, ssd_bytes = bytes_of(lambda: seng.ssd(s))
+        p2p, p2p_bytes = bytes_of(lambda: seng.p2p(s, t))
+        p2p_ne, ne_bytes = bytes_of(
+            lambda: seng.p2p(s, t, early_term=False))
+        want = full[np.arange(2), t]
+        np.testing.assert_array_equal(p2p, want)
+        np.testing.assert_array_equal(p2p_ne, want)
+        np.testing.assert_array_equal(
+            want, [orc.p2p(a, b) for a, b in zip(s.tolist(), t.tolist())])
+        assert p2p_bytes < ssd_bytes, (p2p_bytes, ssd_bytes)
+        assert p2p_bytes <= ne_bytes
+    finally:
+        seng.close()
+
+
+# --------------------------------------------------------- trace accounting
+def test_new_modes_add_constant_traces():
+    """P2P and threshold bodies ride the same single-scan executor: the
+    relax-kernel trace count stays O(1) per mode, independent of the
+    graph's level count (the guard that protects the static-shape plan
+    design, test_serving.py's compile-count test extended to modes)."""
+    counts, levels = [], []
+    for idx in (0, 1):
+        g, ix, _, _ = bundle(idx)
+        eng = QueryEngine(ix)      # fresh engine: count its traces only
+        ops.relax_bucketed.clear_cache()
+        before = ops.TRACE_COUNT
+        srcs = np.arange(4, dtype=np.int32)
+        tgts = srcs + 1
+        eng.ssd(srcs)
+        eng.p2p(srcs, tgts)
+        eng.ssd_within(srcs, 9.0)
+        counts.append(ops.TRACE_COUNT - before)
+        levels.append(ix.n_levels)
+        before = ops.TRACE_COUNT   # steady state: repeats never retrace
+        eng.p2p(srcs + 1, tgts)
+        eng.ssd_within(srcs + 1, 5.0)
+        assert ops.TRACE_COUNT == before
+        assert eng._p2p_jit._cache_size() == 1
+        assert eng._within_jit._cache_size() == 1
+    assert levels[0] != levels[1], "pool graphs must differ in levels"
+    # ssd + p2p + within share relax traces per [M_pad, K_fix] envelope;
+    # a handful total, never one per level
+    assert all(1 <= c <= 6 for c in counts), (counts, levels)
+    assert all(c < lv for c, lv in zip(counts, levels))
