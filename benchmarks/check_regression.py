@@ -15,7 +15,14 @@ Compared per row, matched on stable keys:
   ``mixed``, ISSUE-6) — same ``hit_rate`` / ``real_bytes`` checks as
   store rows, plus ``cold_query_bytes`` (the cold single-query sweep
   footprint, deterministic) must not grow past ``--bytes-tol``: a P2P
-  sweep that stops saving I/O over the full sweep fails here.
+  sweep that stops saving I/O over the full sweep fails here;
+* ``queue_depth`` rows (key: ``codec, queue_depth``, ISSUE-7) — same
+  ``hit_rate`` / ``real_bytes`` checks, and a *fresh-run* invariant
+  with no tolerance at all: at each codec, every depth > 1 row must
+  read no more compressed bytes than the depth-1 row.  The pipeline's
+  determinism design makes these equal; a deeper queue that reads
+  extra bytes (speculative over-read, double-charged fills) fails
+  regardless of what the baseline says.
 
 Hit rate and bytes-read are deterministic for a fixed graph, layout,
 codec, and policy, so their tolerances only absorb intentional
@@ -101,6 +108,43 @@ def compare(baseline: dict, fresh: dict,
                 f"{name}: bytes read {got['real_bytes']} > "
                 f"{ceil:.0f} (baseline {row['real_bytes']} "
                 f"+ {bytes_tol:.0%})")
+
+    fresh_qd = {(r.get("codec", "raw"), r["queue_depth"]): r
+                for r in fresh_t.get("queue_depth", ())}
+    for row in base_t.get("queue_depth", ()):
+        key = (row.get("codec", "raw"), row["queue_depth"])
+        name = f"queue_depth[codec={key[0]}, depth={key[1]}]"
+        got = fresh_qd.get(key)
+        if got is None:
+            out.append(f"{name}: row missing from fresh run")
+            continue
+        floor = row["hit_rate"] - hit_rate_tol
+        if got["hit_rate"] < floor:
+            out.append(
+                f"{name}: hit rate {got['hit_rate']:.3f} < "
+                f"{floor:.3f} (baseline {row['hit_rate']:.3f} "
+                f"- {hit_rate_tol:.0%}pp)")
+        ceil = (1.0 + bytes_tol) * row["real_bytes"]
+        if got["real_bytes"] > max(ceil, row["real_bytes"]):
+            out.append(
+                f"{name}: bytes read {got['real_bytes']} > "
+                f"{ceil:.0f} (baseline {row['real_bytes']} "
+                f"+ {bytes_tol:.0%})")
+    # Fresh-run determinism invariant (no baseline, no tolerance):
+    # read-ahead must never read more than the synchronous depth-1 run.
+    depth1 = {k[0]: r for k, r in fresh_qd.items()
+              if r["queue_depth"] == 1}
+    for (codec, depth), row in sorted(fresh_qd.items(),
+                                      key=lambda kv: kv[0]):
+        base1 = depth1.get(codec)
+        if depth == 1 or base1 is None:
+            continue
+        if row["real_bytes"] > base1["real_bytes"]:
+            out.append(
+                f"queue_depth[codec={codec}, depth={depth}]: read "
+                f"{row['real_bytes']} bytes > depth-1's "
+                f"{base1['real_bytes']} — read-ahead must not inflate "
+                "I/O")
 
     fresh_wl = {r["workload"]: r for r in fresh_t.get("workloads", ())}
     for row in base_t.get("workloads", ()):

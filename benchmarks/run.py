@@ -21,13 +21,23 @@ import time
 
 
 def _git_sha() -> str:
+    """HEAD at write time, ``-dirty``-suffixed when the tree has
+    uncommitted changes — a baseline stamped mid-PR is then visibly
+    provisional instead of silently claiming an older commit."""
+    cwd = os.path.dirname(os.path.abspath(__file__))
     try:
-        return subprocess.check_output(
-            ["git", "rev-parse", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)),
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=cwd,
             stderr=subprocess.DEVNULL).decode().strip()
     except Exception:
         return "unknown"
+    try:
+        dirty = subprocess.check_output(
+            ["git", "status", "--porcelain"], cwd=cwd,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return sha
+    return f"{sha}-dirty" if dirty else sha
 
 
 def _write_bench(path: str, tables: dict) -> None:

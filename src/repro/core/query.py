@@ -54,6 +54,25 @@ __all__ = ["QueryEngine", "dijkstra_reference"]
 INF = jnp.float32(jnp.inf)
 
 
+def _knn_select(dist: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host top-k over a ``[S, n]`` distance matrix (original node
+    order): the k smallest entries per row, ascending by ``(distance,
+    node id)``; unreachable tail padded with ``(-1, +inf)``.  Shared by
+    the in-memory and streaming kNN modes so ties break identically."""
+    s, n = dist.shape
+    nodes = np.full((s, k), -1, np.int32)
+    out = np.full((s, k), np.inf, np.float32)
+    ids = np.arange(n)
+    for i in range(s):
+        order = np.lexsort((ids, dist[i]))[:k]
+        d = dist[i, order]
+        m = int(np.isfinite(d).sum())     # finite entries sort first
+        nodes[i, :m] = order[:m]
+        out[i, :m] = d[:m]
+    return nodes, out
+
+
 def _plan_to_device(plan: SweepPlan):
     """Device-resident plan arrays, in the executor's scan order."""
     return (jnp.asarray(plan.dst), jnp.asarray(plan.src_idx),
@@ -457,6 +476,21 @@ class QueryEngine:
         else:
             dist = self._within_jit(jnp.asarray(src_perm), jnp.float32(d))
         return np.asarray(dist)[:, self.index.perm]
+
+    def knn(self, sources: np.ndarray, k: int
+            ) -> Tuple[np.ndarray, np.ndarray]:
+        """The ``k`` nearest nodes of each source (DESIGN.md §7):
+        ``(nodes, dist)``, each ``[S, k]``, ascending by ``(distance,
+        node id)`` with the source itself included at distance 0; rows
+        with fewer than ``k`` reachable nodes pad with ``(-1, +inf)``.
+
+        In-memory reference: a full SSD sweep + host top-k selection.
+        The streaming engine's bounded-sweep variant
+        (`repro.storage.stream`) is bit-identical.
+        """
+        if not 1 <= k <= self.index.n:
+            raise ValueError(f"k must be in [1, {self.index.n}], got {k}")
+        return _knn_select(self.ssd(sources), k)
 
     def paths(self, sources: np.ndarray, targets: np.ndarray) -> list:
         """Unfold predecessors into explicit node paths (one per source)."""

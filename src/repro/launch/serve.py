@@ -35,6 +35,9 @@ Two index residency modes (DESIGN.md §6):
     PYTHONPATH=src python -m repro.launch.serve --mode threshold \
         --threshold 8
     PYTHONPATH=src python -m repro.launch.serve --store --mode topk --k 10
+    PYTHONPATH=src python -m repro.launch.serve --store --mode knn --k 8
+    PYTHONPATH=src python -m repro.launch.serve --store --queue-depth 8 \
+        --decode-workers 4
 """
 from __future__ import annotations
 
@@ -61,8 +64,9 @@ class QueryResult:
 
     source: int
     dist: np.ndarray                    # [n] distances, original node order
-    #                                     (p2p mode: a scalar distance)
+    #                                     (p2p: a scalar; knn: [k] distances)
     pred: Optional[np.ndarray] = None   # [n] predecessors (SSSP mode only)
+    nodes: Optional[np.ndarray] = None  # knn mode: [k] nearest node ids
     target: Optional[int] = None        # p2p mode: the other endpoint
     latency_s: float = 0.0              # submit -> answer (includes waiting)
     batched_with: int = 1               # real requests sharing the batch
@@ -83,6 +87,10 @@ class ServerStats:
     #: decompressed bytes the cache was filled with; exceeds
     #: ``store_bytes_read`` on codec stores (decompress-on-fill)
     store_bytes_filled: int = 0
+    # Read-pipeline overlap metrics (store-backed with prefetch):
+    stall_seconds: float = 0.0          # modeled consumer wait on the device
+    stall_wall_seconds: float = 0.0     # measured wait for in-flight fills
+    ttfl_seconds: float = 0.0           # time-to-first-level, first sweep
 
     def throughput(self) -> float:
         return self.requests / self.busy_seconds if self.busy_seconds else 0.0
@@ -104,6 +112,7 @@ class BatchIO:
     page_hits: int = 0
     page_misses: int = 0
     filled_bytes: int = 0               # decompressed bytes cached
+    stall_s: float = 0.0                # modeled pipeline stall this batch
 
 
 class QueryServer:
@@ -125,21 +134,33 @@ class QueryServer:
       SSD scan (its ``BatchIO.modeled_bytes`` stays the full-scan model,
       so ``real_bytes`` visibly undercuts it);
     * ``"within"`` — distances clamped to the server-level ``within_d``
-      threshold (labels past it are ``+inf``).
+      threshold (labels past it are ``+inf``);
+    * ``"knn"`` — the ``knn_k`` nearest nodes of each source (answers
+      carry ``[k]`` node ids + distances; store-backed engines run the
+      shrinking-radius bounded sweep).
+
+    Store-backed servers stream through the depth-N read pipeline:
+    ``queue_depth``/``decode_workers`` size it (``None`` keeps the
+    engine defaults), ``pin_frac`` sizes the page cache's pin budget,
+    and ``ServerStats`` reports the overlap metrics (modeled stall
+    seconds, time-to-first-level).
     """
 
-    MODES = ("ssd", "sssp", "p2p", "within")
+    MODES = ("ssd", "sssp", "p2p", "within", "knn")
 
     def __init__(self, engine: Optional[QueryEngine] = None,
                  batch_size: int = 32,
                  max_wait_ms: float = 2.0, cache_entries: int = 1024,
                  sssp: bool = False, mode: Optional[str] = None,
-                 within_d: float = float("inf"),
+                 within_d: float = float("inf"), knn_k: int = 10,
                  device: Optional[BlockDevice] = None,
                  warm_start: bool = False,
                  store_path: Optional[str] = None,
                  cache_bytes: Optional[int] = None,
                  cache_policy: str = "2q",
+                 pin_frac: Optional[float] = None,
+                 queue_depth: Optional[int] = None,
+                 decode_workers: Optional[int] = None,
                  engine_opts: Optional[dict] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -158,11 +179,17 @@ class QueryServer:
             # so no synthetic scan charge is applied per batch.
             from ..storage import (IndexStore, PageCache,
                                    StreamingQueryEngine)
-            cache = PageCache(cache_bytes, policy=cache_policy)
+            cache = PageCache(cache_bytes, policy=cache_policy,
+                              pin_frac=pin_frac)
             store = IndexStore(store_path, device=device, cache=cache)
             device = store.device
+            opts = dict(engine_opts or {})
+            if queue_depth is not None:
+                opts.setdefault("queue_depth", queue_depth)
+            if decode_workers is not None:
+                opts.setdefault("decode_workers", decode_workers)
             try:
-                engine = StreamingQueryEngine(store, **(engine_opts or {}))
+                engine = StreamingQueryEngine(store, **opts)
             except Exception:
                 store.close()   # don't leak the opened segments
                 raise
@@ -177,6 +204,7 @@ class QueryServer:
         self.mode = mode
         self.sssp = mode == "sssp"
         self.within_d = float(within_d)
+        self.knn_k = int(knn_k)
         self.device = device or BlockDevice()
         self.stats = ServerStats()
         self.batch_io: List[BatchIO] = []
@@ -246,6 +274,9 @@ class QueryServer:
             batch = np.pad(requests, pad, mode="edge")
         before = (self.store.cache.stats.snapshot()
                   if self.store is not None else None)
+        pstats = (self.engine.pipeline_stats()
+                  if hasattr(self.engine, "pipeline_stats") else None)
+        pbefore = pstats.snapshot() if pstats is not None else None
         t0 = time.perf_counter()
         if self.mode == "sssp":
             dist, pred = self.engine.sssp(batch)
@@ -253,9 +284,19 @@ class QueryServer:
             dist, pred = self.engine.p2p(batch[:, 0], batch[:, 1]), None
         elif self.mode == "within":
             dist, pred = self.engine.ssd_within(batch, self.within_d), None
+        elif self.mode == "knn":
+            # rows carry (distances, node ids); _row_fields unpacks
+            nodes, dist = self.engine.knn(batch, self.knn_k)
+            pred = nodes
         else:
             dist, pred = self.engine.ssd(batch), None
         self.stats.busy_seconds += time.perf_counter() - t0
+        pdelta = (pstats - pbefore) if pstats is not None else None
+        if pdelta is not None:
+            self.stats.stall_seconds += pdelta.stall_model_s
+            self.stats.stall_wall_seconds += pdelta.stall_wall_s
+            if self.stats.ttfl_seconds == 0.0:
+                self.stats.ttfl_seconds = pdelta.ttfl_s
         self.stats.batches += 1
         self.stats.padded_slots += self.batch_size - fill
         if self.store is None:
@@ -275,7 +316,8 @@ class QueryServer:
                 batch=self.stats.batches, real_bytes=delta.bytes_read,
                 modeled_bytes=self._sweep_bytes, page_hits=delta.hits,
                 page_misses=delta.misses,
-                filled_bytes=delta.bytes_filled))
+                filled_bytes=delta.bytes_filled,
+                stall_s=pdelta.stall_model_s if pdelta else 0.0))
             self._last_batch_bytes = float(delta.bytes_read)
         rows = []
         for i, req in enumerate(self._keys(requests)):
@@ -287,6 +329,13 @@ class QueryServer:
             self._cache_put(req, row)
             rows.append(row)
         return rows
+
+    def _row_fields(self, row: tuple) -> tuple:
+        """Split a cached row into ``(dist, pred, nodes)`` — knn rows
+        carry node ids in the second slot, SSSP rows predecessors."""
+        if self.mode == "knn":
+            return row[0], None, row[1]
+        return row[0], row[1], None
 
     # ------------------------------------------------------------- sync path
     def warmup(self) -> None:
@@ -301,6 +350,10 @@ class QueryServer:
             # Zero the page-cache counters too; warmed *blocks* stay
             # resident (that is what a real warm start buys).
             self.store.cache.reset_stats()
+        ps = (self.engine.pipeline_stats()
+              if hasattr(self.engine, "pipeline_stats") else None)
+        if ps is not None:
+            ps.reset()   # warmup sweeps must not count as stall/ttfl
 
     def serve_stream(self, requests: np.ndarray) -> List[QueryResult]:
         """Closed-loop driver: answer a request list in arrival order.
@@ -335,8 +388,9 @@ class QueryServer:
                 self.stats.requests += 1
                 self.stats.cache_hits += cached
                 src, tgt = k if isinstance(k, tuple) else (k, None)
+                d, p, nd = self._row_fields(row)
                 out.append(QueryResult(
-                    source=src, target=tgt, dist=row[0], pred=row[1],
+                    source=src, target=tgt, dist=d, pred=p, nodes=nd,
                     latency_s=lat, batched_with=chunk.shape[0],
                     cached=cached,
                     io_bytes=0.0 if (cached or k in charged) else share))
@@ -358,8 +412,9 @@ class QueryServer:
         if hit is not None:
             self.stats.requests += 1
             self.stats.cache_hits += 1
+            d, p, nd = self._row_fields(hit)
             return QueryResult(source=int(source), target=target,
-                               dist=hit[0], pred=hit[1],
+                               dist=d, pred=p, nodes=nd,
                                latency_s=time.perf_counter() - t0,
                                cached=True)
         fut = asyncio.get_running_loop().create_future()
@@ -399,8 +454,9 @@ class QueryServer:
                 self.stats.requests += 1
                 src, tgt = req if isinstance(req, tuple) else (req, None)
                 if not fut.done():
+                    d, p, nd = self._row_fields(row)
                     fut.set_result(QueryResult(
-                        source=src, target=tgt, dist=row[0], pred=row[1],
+                        source=src, target=tgt, dist=d, pred=p, nodes=nd,
                         latency_s=now - t0, batched_with=len(take),
                         io_bytes=share))
         if self._pending and self._timer is None:
@@ -451,14 +507,15 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--mode", default="ssd",
-                    choices=["ssd", "p2p", "threshold", "topk"],
+                    choices=["ssd", "p2p", "threshold", "topk", "knn"],
                     help="query mode (DESIGN.md §7): full SSD sweeps, "
                          "point-to-point pairs, distance-threshold "
-                         "queries, or exact top-k closeness")
+                         "queries, exact top-k closeness, or k-nearest "
+                         "nodes per source")
     ap.add_argument("--threshold", type=float, default=10.0,
                     help="distance bound for --mode threshold")
     ap.add_argument("--k", type=int, default=10,
-                    help="result count for --mode topk")
+                    help="result count for --mode topk / knn")
     ap.add_argument("--sssp", action="store_true")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--cache", type=int, default=1024)
@@ -485,14 +542,28 @@ def main() -> None:
                          "compresses id streams losslessly, f16 also "
                          "narrows weights within a documented eps "
                          "(DESIGN.md §6)")
+    ap.add_argument("--queue-depth", type=int, default=4,
+                    help="read-pipeline depth (with --store): levels of "
+                         "block reads kept in flight ahead of the sweep "
+                         "(1 = no read-ahead)")
+    ap.add_argument("--decode-workers", type=int, default=2,
+                    help="off-thread decompression pool width (with "
+                         "--store)")
+    ap.add_argument("--pin-frac", type=float, default=None,
+                    help="fraction of the page-cache budget reservable "
+                         "by pinned core blocks (with --store; default "
+                         "0.5)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the read pipeline entirely (with "
+                         "--store): every block read is synchronous")
     args = ap.parse_args()
     if args.sssp and args.mode != "ssd":
         ap.error("--sssp only combines with the default ssd mode")
     # CLI "threshold" = server mode "within"; "topk" drives the engine
     # directly through core.closeness (it is a batch job, not a stream).
     server_mode = {"ssd": "sssp" if args.sssp else "ssd",
-                   "p2p": "p2p", "threshold": "within"}.get(args.mode,
-                                                            "ssd")
+                   "p2p": "p2p", "threshold": "within",
+                   "knn": "knn"}.get(args.mode, "ssd")
 
     g = (grid_road_graph(args.side) if args.graph == "road"
          else power_law_digraph(args.side * args.side, 4, weighted=True))
@@ -519,15 +590,19 @@ def main() -> None:
               f"decompressed segments)")
         server = QueryServer(store_path=store_dir, cache_bytes=budget,
                              batch_size=args.batch, mode=server_mode,
-                             within_d=args.threshold,
+                             within_d=args.threshold, knn_k=args.k,
                              cache_entries=args.cache,
                              max_wait_ms=args.max_wait_ms,
                              cache_policy=args.cache_policy,
-                             engine_opts={"use_pallas": args.use_pallas})
+                             pin_frac=args.pin_frac,
+                             queue_depth=args.queue_depth,
+                             decode_workers=args.decode_workers,
+                             engine_opts={"use_pallas": args.use_pallas,
+                                          "prefetch": not args.no_prefetch})
     else:
         eng = QueryEngine(ix, use_pallas=args.use_pallas)
         server = QueryServer(eng, batch_size=args.batch, mode=server_mode,
-                             within_d=args.threshold,
+                             within_d=args.threshold, knn_k=args.k,
                              cache_entries=args.cache,
                              max_wait_ms=args.max_wait_ms)
 
@@ -579,7 +654,8 @@ def main() -> None:
             return
         lat = np.array([r.latency_s for r in results]) * 1e3
         label = {"ssd": "SSD", "sssp": "SSSP", "p2p": "P2P",
-                 "within": f"within(d={args.threshold:g})"}[server_mode]
+                 "within": f"within(d={args.threshold:g})",
+                 "knn": f"kNN(k={args.k})"}[server_mode]
         print(f"served {st.requests} {label} "
               f"requests in {st.batches} batches (batch={args.batch}, "
               f"{st.cache_hits} cache hits, {st.padded_slots} padded slots)")
@@ -606,6 +682,12 @@ def main() -> None:
                       f"compressed read -> {st.store_bytes_filled/1e6:.2f}"
                       f" MB decompressed on fill "
                       f"({real/max(st.store_bytes_filled,1):.0%} ratio)")
+            if not args.no_prefetch:
+                print(f"read pipeline (depth {args.queue_depth}, "
+                      f"{args.decode_workers} decode workers): modeled "
+                      f"stall {st.stall_seconds*1e3:.1f} ms, measured "
+                      f"wait {st.stall_wall_seconds*1e3:.1f} ms, "
+                      f"time-to-first-level {st.ttfl_seconds*1e3:.2f} ms")
     finally:
         # The --store index is a throwaway in /tmp: always release the
         # segment fds / prefetch thread and remove it, even on Ctrl-C.

@@ -8,5 +8,6 @@ from .blockfile import (DEFAULT_BLOCK_BYTES, DEFAULT_CODEC,  # noqa: F401
                         load_store, open_store, save_store, segment_bytes,
                         segment_logical_bytes)
 from .codecs import CODEC_IDS, F16_EPS_REL  # noqa: F401
-from .pagecache import CacheStats, PageCache  # noqa: F401
+from .pagecache import CacheStats, PageCache, PendingBlock  # noqa: F401
+from .pipeline import PipelineStats, ReadPipeline  # noqa: F401
 from .stream import StreamingQueryEngine  # noqa: F401

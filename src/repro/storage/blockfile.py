@@ -297,6 +297,66 @@ class SegmentReader:
             self._fd = None
 
     # ------------------------------------------------------------- block I/O
+    def frame_info(self, block: int) -> Tuple[int, int]:
+        """``(decoded_bytes, disk_bytes)`` of one logical block — known
+        from footer metadata alone, *before* any read happens.  This is
+        what lets the read pipeline admit a block's budget and charge
+        ``bytes_read`` at submit time (`storage/pipeline.py`)."""
+        if self.version >= 5:
+            return self.block_bytes, self._frames[block - 1][1]
+        return self.block_bytes, self.block_bytes
+
+    def read_frames(self, b0: int, b1: int) -> bytes:
+        """Raw on-disk bytes of blocks ``b0..b1`` inclusive in **one**
+        pread (batched extent read).  v5 frames are written
+        back-to-back, so any contiguous block run is one file range;
+        v3/v4 blocks are block-aligned.  Slice per block with
+        :meth:`frame_slice`; no device charge happens here."""
+        if self.version >= 5:
+            off0 = self._frames[b0 - 1][0]
+            off1, comp_len = self._frames[b1 - 1][:2]
+            return os.pread(self._fd, off1 + _FRAME.size + comp_len - off0,
+                            off0)
+        return os.pread(self._fd, (b1 - b0 + 1) * self.block_bytes,
+                        b0 * self.block_bytes)
+
+    def frame_slice(self, buf: bytes, b0: int, block: int) -> bytes:
+        """One block's frame bytes out of a ``read_frames(b0, ...)``
+        buffer."""
+        if self.version >= 5:
+            off = self._frames[block - 1][0] - self._frames[b0 - 1][0]
+            return buf[off:off + _FRAME.size + self._frames[block - 1][1]]
+        off = (block - b0) * self.block_bytes
+        return buf[off:off + self.block_bytes]
+
+    def decode_frame(self, block: int, raw: bytes) -> bytes:
+        """CRC-verify + decode one block's frame bytes into the decoded
+        ``block_bytes`` payload.  Pure CPU — this is the part the read
+        pipeline runs on its decode worker pool; a corrupt frame raises
+        the same ``ValueError`` the synchronous path does."""
+        if self.version >= 5:
+            _file_off, comp_len, codec_id, crc = self._frames[block - 1]
+            f_codec, f_len, f_crc = _FRAME.unpack_from(raw)
+            blob = raw[_FRAME.size:]
+            if (len(blob) != comp_len or f_codec != codec_id
+                    or f_len != comp_len or f_crc != crc
+                    or zlib.crc32(blob) != crc):
+                raise ValueError(
+                    f"{self.path}: CRC mismatch in block {block} — "
+                    "corrupt segment read")
+            lo = block * self.block_bytes
+            return decode_block(
+                codec_id, blob,
+                block_spans(self._spans, lo, lo + self.block_bytes,
+                            starts=self._span_starts),
+                self.block_bytes)
+        if self._crcs is not None and 1 <= block <= len(self._crcs):
+            if zlib.crc32(raw) != self._crcs[block - 1]:
+                raise ValueError(
+                    f"{self.path}: CRC mismatch in block {block} — "
+                    "corrupt segment read")
+        return raw
+
     def _load_block(self, block: int):
         """Load one logical block for the page cache.
 
@@ -306,32 +366,12 @@ class SegmentReader:
         device is charged the bytes actually read off "disk" (the
         compressed frame payload; frame/footer metadata is uncharged).
         """
+        raw = self.read_frames(block, block)
+        data = self.decode_frame(block, raw)
         if self.version >= 5:
-            file_off, comp_len, codec_id, crc = self._frames[block - 1]
-            raw = os.pread(self._fd, _FRAME.size + comp_len, file_off)
-            f_codec, f_len, f_crc = _FRAME.unpack_from(raw)
-            blob = raw[_FRAME.size:]
-            if (len(blob) != comp_len or f_codec != codec_id
-                    or f_len != comp_len or f_crc != crc
-                    or zlib.crc32(blob) != crc):
-                raise ValueError(
-                    f"{self.path}: CRC mismatch in block {block} — "
-                    "corrupt segment read")
+            comp_len = self._frames[block - 1][1]
             self.device.access_block(self.base_block + block, comp_len)
-            lo = block * self.block_bytes
-            data = decode_block(
-                codec_id, blob,
-                block_spans(self._spans, lo, lo + self.block_bytes,
-                            starts=self._span_starts),
-                self.block_bytes)
             return data, comp_len
-        data = os.pread(self._fd, self.block_bytes,
-                        block * self.block_bytes)
-        if self._crcs is not None and 1 <= block <= len(self._crcs):
-            if zlib.crc32(data) != self._crcs[block - 1]:
-                raise ValueError(
-                    f"{self.path}: CRC mismatch in block {block} — "
-                    "corrupt segment read")
         self.device.access_block(self.base_block + block, len(data))
         return data
 
@@ -351,6 +391,14 @@ class SegmentReader:
         b0, b1, _ = self._level_blocks(lvl)
         return [(self._cache_ns, b) for b in range(b0, b1 + 1)]
 
+    def clip_level(self, buf: bytes, lvl: int, skip: int) -> bytes:
+        """Clip a level's slab bytes out of its joined block payloads
+        (shared by the synchronous fetch and the pipeline's assembly)."""
+        if self.version >= 4:
+            _off, length, _ = self.extents[lvl]
+            return buf[skip:skip + length]
+        return buf[:self.extents[lvl][2]]
+
     def _fetch(self, lvl: int, pin: bool) -> bytes:
         """One level's raw slab bytes via the page cache."""
         if self.version >= 4 and self.extents[lvl][1] == 0:
@@ -360,11 +408,7 @@ class SegmentReader:
         parts = [self.cache.get((self._cache_ns, b),
                                 lambda b=b: self._load_block(b), pin=pin)
                  for b in range(b0, b1 + 1)]
-        buf = b"".join(parts)
-        if self.version >= 4:
-            off, length, _ = self.extents[lvl]
-            return buf[skip:skip + length]
-        return buf[:self.extents[lvl][2]]
+        return self.clip_level(b"".join(parts), lvl, skip)
 
     def read_level(self, lvl: int, pin: bool = False
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
@@ -376,7 +420,13 @@ class SegmentReader:
         if not 0 <= lvl < self.n_real:
             raise IndexError(f"{self.name}: level {lvl} out of range "
                              f"(0..{self.n_real - 1})")
-        buf = self._fetch(lvl, pin)
+        return self.parse_slab(self._fetch(lvl, pin), lvl)
+
+    def parse_slab(self, buf: bytes, lvl: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray, np.ndarray]:
+        """Decode one level's clipped slab bytes into the full
+        ``[M_pad, K_fix]`` rectangle (see :meth:`read_level`)."""
         m, k = self.m_pad, self.k_fix
         m_real = self.extents[lvl][2] if self.version >= 4 else -1
         if m_real < 0:          # full rectangle with explicit valid vector
@@ -444,11 +494,18 @@ class IndexStore:
     ``pin_segments`` names the segments whose blocks are pinned into
     the cache on first read (default: the small ``plan_core`` — see
     :data:`PIN_SEGMENTS`); the cache's pin budget bounds how much can
-    stick, so over-subscription degrades gracefully."""
+    stick, so over-subscription degrades gracefully.  ``pin_frac``
+    sizes that budget when the store builds its own default cache (it
+    is an error to pass both ``cache`` and ``pin_frac`` — configure the
+    cache directly instead)."""
 
     def __init__(self, path: str, device: Optional[BlockDevice] = None,
                  cache: Optional[PageCache] = None,
-                 pin_segments: Optional[Sequence[str]] = PIN_SEGMENTS):
+                 pin_segments: Optional[Sequence[str]] = PIN_SEGMENTS,
+                 pin_frac: Optional[float] = None):
+        if cache is not None and pin_frac is not None:
+            raise ValueError("pass pin_frac on the PageCache itself "
+                             "when supplying an explicit cache")
         resident = os.path.join(path, RESIDENT_FILE)
         if not os.path.isfile(resident):
             raise FileNotFoundError(
@@ -469,7 +526,8 @@ class IndexStore:
                 f"({device.block_bytes}) != store block size "
                 f"({self.block_bytes}) — I/O accounting would be wrong")
         self.device = device or BlockDevice(block_bytes=self.block_bytes)
-        self.cache = cache if cache is not None else PageCache()
+        self.cache = (cache if cache is not None
+                      else PageCache(pin_frac=pin_frac))
         pin_set = frozenset(pin_segments or ())
         self.segments: Dict[str, SegmentReader] = {}
         try:

@@ -57,20 +57,35 @@ Four eviction policies:
 
 **Pinning** (segment-aware admission, DESIGN.md §6): ``get(...,
 pin=True)`` moves the block into a pinned region that eviction never
-touches, bounded by ``PIN_FRAC`` of the budget (requests beyond the
+touches, bounded by ``pin_frac`` of the budget (requests beyond the
 pin budget degrade to normal caching — never an error).  The store
 pins the small ``plan_core`` segment resident so once-per-sweep
 ``plan_f`` scans can never evict it, and SSSP reconstruction pins the
 levels the distance pass just touched (they are immediately re-read);
 :meth:`unpin` releases blocks back to the main region's MRU position.
 
-The cache is shared by every segment of a store and by the prefetch
-thread (`storage/stream.py`), so all state — residency map, byte
-budget, counters — is guarded by one lock.  The lock is *held across
-the loader call*: concurrent queries serialize on disk reads, which
-keeps budget enforcement exact (resident bytes never exceed
-``capacity_bytes``, pinned included) and matches the one-spindle
-device model.
+The cache is shared by every segment of a store and by the read
+pipeline (`storage/stream.py` / `storage/pipeline.py`), so all state —
+residency map, byte budget, counters — is guarded by one lock.  On the
+synchronous :meth:`get` path the lock is *held across the loader
+call*: concurrent queries serialize on disk reads, which keeps budget
+enforcement exact (resident bytes never exceed ``capacity_bytes``,
+pinned included) and matches the one-spindle device model.
+
+**Pipelined fills** (:meth:`begin_fill`, DESIGN.md §6): the async read
+pipeline admits a :class:`PendingBlock` placeholder *before* the read
+happens — decoded block sizes are known ahead of time (always
+``block_bytes``), so every cache-state transition (hit/miss counting,
+admission, eviction, pinning, byte metering) runs on the query thread
+at submit time, in exactly the block order the synchronous path would
+use.  Only the payload (pread + CRC + codec decode, off-thread) is
+asynchronous: the worker completes the placeholder in place, and any
+consumer — the pipeline's level tickets, or a synchronous :meth:`get`
+hit racing an in-flight fill — waits on it *outside* the lock.  Hit /
+miss / eviction / ``bytes_read`` sequences are therefore bit-identical
+at every queue depth, including depth 1 and the no-pipeline path.  A
+failed fill (CRC mismatch) is :meth:`discard`-ed by the worker and the
+error re-raises in every waiting thread.
 """
 from __future__ import annotations
 
@@ -79,9 +94,45 @@ import dataclasses
 import threading
 from typing import Callable, Hashable, Iterable, Optional
 
-__all__ = ["CacheStats", "PageCache", "POLICIES"]
+__all__ = ["CacheStats", "PageCache", "PendingBlock", "POLICIES"]
 
 POLICIES = ("lru", "clock", "arc", "2q")
+
+
+class PendingBlock:
+    """Placeholder for a block whose fill is in flight (pipelined read).
+
+    The decoded size is known up front, so the placeholder occupies the
+    block's budget immediately (``len()`` reports it); the payload
+    arrives later via :meth:`set` (or :meth:`fail`, which re-raises the
+    fill error in every waiter).  The object stays in the cache after
+    completion — lookups transparently :meth:`wait` on it."""
+
+    __slots__ = ("size", "data", "error", "_done")
+
+    def __init__(self, size: int):
+        self.size = int(size)
+        self.data: Optional[bytes] = None
+        self.error: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    def __len__(self) -> int:
+        return self.size
+
+    def set(self, data: bytes) -> None:
+        self.data = data
+        self._done.set()
+
+    def fail(self, exc: BaseException) -> None:
+        self.error = exc
+        self._done.set()
+
+    def wait(self) -> bytes:
+        """Block until the fill completes; re-raise a failed fill."""
+        self._done.wait()
+        if self.error is not None:
+            raise self.error
+        return self.data
 
 
 @dataclasses.dataclass
@@ -93,20 +144,23 @@ class CacheStats:
     peak_bytes: int = 0     # high-water mark of resident bytes
     ghost_hits: int = 0     # misses whose key had a live ghost (arc/2q)
     bytes_filled: int = 0   # decompressed bytes handed back by loaders
+    pinned_bytes: int = 0   # gauge: bytes currently pinned resident
 
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
     def __sub__(self, other: "CacheStats") -> "CacheStats":
-        """Counter delta (for per-batch reporting); peak is kept as-is."""
+        """Counter delta (for per-batch reporting); the gauges (peak,
+        pinned bytes) are kept as-is."""
         return CacheStats(self.hits - other.hits,
                           self.misses - other.misses,
                           self.evictions - other.evictions,
                           self.bytes_read - other.bytes_read,
                           self.peak_bytes,
                           self.ghost_hits - other.ghost_hits,
-                          self.bytes_filled - other.bytes_filled)
+                          self.bytes_filled - other.bytes_filled,
+                          self.pinned_bytes)
 
     def snapshot(self) -> "CacheStats":
         return dataclasses.replace(self)
@@ -127,18 +181,23 @@ class PageCache:
     #: the cold-block window (at least the most recent block is always
     #: kept, even when one block exceeds the window share).
     WINDOW_FRAC = 0.125
-    #: fraction of the budget pinned blocks may occupy; pin requests
-    #: beyond it degrade to normal (unpinned) caching.
+    #: default fraction of the budget pinned blocks may occupy; pin
+    #: requests beyond it degrade to normal (unpinned) caching.  The
+    #: per-instance knob is the ``pin_frac`` constructor arg.
     PIN_FRAC = 0.5
 
     def __init__(self, capacity_bytes: Optional[int] = None,
-                 policy: str = "lru"):
+                 policy: str = "lru", pin_frac: Optional[float] = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown eviction policy: {policy!r}")
         if capacity_bytes is not None and capacity_bytes < 0:
             raise ValueError("capacity_bytes must be >= 0 or None")
+        pin_frac = self.PIN_FRAC if pin_frac is None else float(pin_frac)
+        if not 0.0 <= pin_frac <= 1.0:
+            raise ValueError("pin_frac must be in [0, 1]")
         self.capacity_bytes = capacity_bytes
         self.policy = policy
+        self.pin_frac = pin_frac
         self.stats = CacheStats()
         self._lock = threading.Lock()
         # lru/clock primary store: key -> bytes, order per policy
@@ -182,6 +241,11 @@ class PageCache:
         ``pin=True`` additionally pins the block (hit or miss) if the
         pin budget allows; pinned blocks are never evicted until
         :meth:`unpin` releases them.
+
+        A hit on a :class:`PendingBlock` (a fill the read pipeline has
+        in flight) waits for that fill *outside* the lock and re-raises
+        its error, so synchronous traffic composes with pipelined fills
+        without double-reading or double-charging.
         """
         with self._lock:
             data = self._peek_hit(key)
@@ -189,19 +253,82 @@ class PageCache:
                 self.stats.hits += 1
                 if pin:
                     self._try_pin(key)
-                return data
-            self.stats.misses += 1
-            loaded = load()
-            if isinstance(loaded, tuple):
-                data, disk_bytes = loaded
             else:
-                data, disk_bytes = loaded, len(loaded)
+                self.stats.misses += 1
+                loaded = load()
+                if isinstance(loaded, tuple):
+                    data, disk_bytes = loaded
+                else:
+                    data, disk_bytes = loaded, len(loaded)
+                self.stats.bytes_read += disk_bytes
+                self.stats.bytes_filled += len(data)
+                self._admit(key, data, pin)
+                self.stats.peak_bytes = max(self.stats.peak_bytes,
+                                            self._resident())
+                return data
+        if isinstance(data, PendingBlock):
+            return data.wait()
+        return data
+
+    def begin_fill(self, key: Hashable, size: int, disk_bytes: int,
+                   pin: bool = False):
+        """Pipelined-fill admission (the read pipeline's submit step).
+
+        Returns ``(entry, owner)``.  On a hit, ``entry`` is the
+        resident value (``bytes`` or an in-flight :class:`PendingBlock`)
+        and ``owner`` is False.  On a miss, a fresh
+        :class:`PendingBlock` of the (known) decoded ``size`` is
+        admitted *now* — counters (``bytes_read`` advances by the
+        compressed ``disk_bytes``, ``bytes_filled`` by ``size``),
+        evictions and pinning all happen here on the calling thread,
+        exactly as a synchronous :meth:`get` miss would — and ``owner``
+        is True: the caller must read+decode the block and complete the
+        placeholder with ``entry.set(data)`` (or ``entry.fail(exc)``
+        after :meth:`discard`).  Determinism contract: calling this in
+        block order yields hit/miss/eviction/byte sequences
+        bit-identical to the synchronous path, at any queue depth.
+        """
+        with self._lock:
+            data = self._peek_hit(key)
+            if data is not None:
+                self.stats.hits += 1
+                if pin:
+                    self._try_pin(key)
+                return data, False
+            self.stats.misses += 1
             self.stats.bytes_read += disk_bytes
-            self.stats.bytes_filled += len(data)
-            self._admit(key, data, pin)
+            self.stats.bytes_filled += size
+            holder = PendingBlock(size)
+            self._admit(key, holder, pin)
             self.stats.peak_bytes = max(self.stats.peak_bytes,
                                         self._resident())
-            return data
+            return holder, True
+
+    def discard(self, key: Hashable, entry: "PendingBlock") -> None:
+        """Drop a failed pipelined fill (decode worker error path): if
+        ``entry`` is still what ``key`` resolves to, remove it so later
+        traffic re-reads the block instead of re-raising forever.  Call
+        *before* ``entry.fail(exc)``."""
+        with self._lock:
+            if self._pinned.get(key) is entry:
+                self._pinned.pop(key)
+                self._pinned_bytes -= len(entry)
+                self.stats.pinned_bytes = self._pinned_bytes
+                return
+            region = self._find_region(key)
+            if region is None or region[key] is not entry:
+                return
+            region.pop(key)
+            size = len(entry)
+            if region is self._blocks:
+                self._bytes -= size
+                self._ref.pop(key, None)
+            elif region is self._win:
+                self._win_bytes -= size
+            elif region is self._t1:
+                self._t1_bytes -= size
+            else:
+                self._t2_bytes -= size
 
     def pin(self, key: Hashable) -> bool:
         """Pin an already-resident block (no-op miss). True if pinned."""
@@ -231,6 +358,7 @@ class PageCache:
                 else:                       # arc/2q: main-region MRU
                     self._t2[key] = data
                     self._t2_bytes += len(data)
+            self.stats.pinned_bytes = self._pinned_bytes
 
     @property
     def resident_bytes(self) -> int:
@@ -265,12 +393,15 @@ class PageCache:
             self._bytes = self._win_bytes = self._t1_bytes = 0
             self._t2_bytes = self._b1_bytes = self._b2_bytes = 0
             self._pinned_bytes = 0
+            self.stats.pinned_bytes = 0
             self._p = 0.0
 
     def reset_stats(self) -> CacheStats:
-        """Zero the counters (cache contents stay resident)."""
+        """Zero the counters (cache contents stay resident; the
+        pinned-bytes gauge carries over)."""
         with self._lock:
-            out, self.stats = self.stats, CacheStats()
+            out, self.stats = self.stats, CacheStats(
+                pinned_bytes=self._pinned_bytes)
             return out
 
     # ------------------------------------------------------------- internals
@@ -286,7 +417,7 @@ class PageCache:
 
     def _pin_cap(self) -> Optional[int]:
         cap = self.capacity_bytes
-        return None if cap is None else int(cap * self.PIN_FRAC)
+        return None if cap is None else int(cap * self.pin_frac)
 
     def _find_region(self, key: Hashable):
         for d in (self._blocks, self._win, self._t1, self._t2):
@@ -349,6 +480,7 @@ class PageCache:
             self._t2_bytes -= size
         self._pinned[key] = data
         self._pinned_bytes += size
+        self.stats.pinned_bytes = self._pinned_bytes
         return True
 
     # ---------------------------------------------------------- admission
@@ -365,6 +497,7 @@ class PageCache:
                 self._unghost(key)
                 self._pinned[key] = data
                 self._pinned_bytes += size
+                self.stats.pinned_bytes = self._pinned_bytes
                 self._shrink_for_pin(cap)
                 return
             # pin budget exhausted: fall through to normal admission

@@ -22,7 +22,14 @@ Asserts the ISSUE-3/4/5 acceptance criteria end to end:
   is too), and answers still bit-identical;
 * store-backed P2P (ISSUE-6, DESIGN.md §7): served pair answers equal
   the full SSD rows' entries, and a cold P2P sweep reads strictly
-  fewer bytes than a cold full sweep from the same source.
+  fewer bytes than a cold full sweep from the same source;
+* the depth-4 read pipeline (ISSUE-7): a ``queue_depth=4`` server
+  answers bit-identically to ``queue_depth=1`` while reading exactly
+  the same bytes and hit/miss sequence (cache transactions are
+  submit-ordered) and exposes the overlap metrics (time-to-first-level
+  ticks, stall counters present);
+* kNN mode (ISSUE-7 satellite): store-served ``--mode knn`` answers
+  equal the in-memory engine's k-nearest rows exactly.
 
     PYTHONPATH=src python -m repro.storage.smoke
 """
@@ -41,11 +48,12 @@ N_QUERIES = 16
 
 
 def _serve_and_verify(store_dir: str, budget: int, sources: np.ndarray,
-                      direct: np.ndarray) -> QueryServer:
+                      direct: np.ndarray, **server_kw) -> QueryServer:
     """Serve from the store at one cache budget (bytes) and assert the
     answers are bit-identical to the in-memory engine's rows."""
     server = QueryServer(store_path=store_dir, cache_bytes=budget,
-                         batch_size=8, cache_entries=0, warm_start=True)
+                         batch_size=8, cache_entries=0, warm_start=True,
+                         **server_kw)
     try:
         results = server.serve_stream(sources)
     finally:
@@ -111,6 +119,40 @@ def main() -> None:
         assert std.store_bytes_filled > std.store_bytes_read, \
             "decompress-on-fill accounting missing (filled <= read)"
 
+        # Depth-4 read pipeline (ISSUE-7): identical answers, identical
+        # bytes and hit/miss sequence vs depth 1, overlap metrics live.
+        st_d1 = _serve_and_verify(delta_dir, budget25, sources, direct,
+                                  queue_depth=1).stats
+        st_d4 = _serve_and_verify(delta_dir, budget25, sources, direct,
+                                  queue_depth=4, decode_workers=2).stats
+        assert st_d4.store_bytes_read == st_d1.store_bytes_read, \
+            f"depth-4 read {st_d4.store_bytes_read} bytes, depth-1 " \
+            f"{st_d1.store_bytes_read} — read-ahead changed the " \
+            "cache sequence"
+        assert (st_d4.page_hits, st_d4.page_misses) == \
+            (st_d1.page_hits, st_d1.page_misses), \
+            "depth-4 hit/miss sequence diverged from depth-1"
+        assert st_d4.ttfl_seconds > 0.0, \
+            "pipelined server never recorded a time-to-first-level"
+        assert st_d4.stall_seconds >= 0.0 \
+            and st_d4.stall_wall_seconds >= 0.0
+
+        # kNN smoke (ISSUE-7 satellite): store-served k-nearest rows
+        # must equal the in-memory engine's exactly (shared selection
+        # + tie-breaking).
+        knodes, kdist = QueryEngine(ix).knn(sources, 5)
+        knn_server = QueryServer(store_path=store_dir,
+                                 cache_bytes=budget25, batch_size=8,
+                                 cache_entries=0, mode="knn", knn_k=5,
+                                 warm_start=True)
+        try:
+            knn_results = knn_server.serve_stream(sources)
+        finally:
+            knn_server.close()
+        for i, r in enumerate(knn_results):
+            np.testing.assert_array_equal(r.nodes, knodes[i])
+            np.testing.assert_array_equal(r.dist, kdist[i])
+
         # P2P smoke (ISSUE-6): serve pairs store-backed; answers must
         # equal the full SSD rows' entries, the cache must still see
         # real traffic, and a cold meet-in-the-middle sweep must read
@@ -170,6 +212,9 @@ def main() -> None:
               f"{st25.store_bytes_read/1e6:.2f} MB read, "
               f"hit rate {std.page_hit_rate():.1%}, "
               f"answers bit-identical to the in-memory engine; "
+              f"depth-4 pipeline: bytes/hits identical to depth-1, "
+              f"ttfl {st_d4.ttfl_seconds*1e3:.2f} ms; "
+              f"knn(k=5): {len(knn_results)} queries bit-identical; "
               f"p2p: {stp.requests} pairs served "
               f"({stp.page_hit_rate():.1%} hit rate), cold sweep "
               f"{p2p_bytes/1e3:.0f} KB vs {ssd_bytes/1e3:.0f} KB full")

@@ -31,26 +31,27 @@ exactly the blocks a cyclic-thrash policy would have dropped — is the
 one the pins save.  A ``finally`` ledger releases any leftover leases
 even when a sweep raises.
 
-``prefetch=True`` overlaps the next level's block reads with the
-current level's *compute* on a single background thread — the
-streaming analogue of read-ahead.  For a v5 codec store the prefetch
-thread also runs the decompress-on-fill work, so decode overlaps the
-query thread's jit step the same way the read does.  Caveat: fills
-(read + CRC + decode) run under the page cache's one lock — by design,
-so budget accounting stays exact and disk access serializes like the
-modeled one-spindle device — so a query-thread cache *hit* that races
-an in-flight prefetch fill waits for that fill; prefetch buys overlap
-with compute, not with other cache traffic.  The page cache and
-segment readers are thread-safe (that one lock, ``os.pread``), so the
-prefetcher needs no extra coordination.  Loader failures (e.g. a CRC mismatch on a corrupt
-segment) always surface in the querying thread: the level generator
-re-raises the prefetched exception on the next pull, and if the
-consumer abandons the sweep mid-stream the generator's cleanup drains
-the in-flight future so the error is never silently swallowed.
+``prefetch=True`` streams each plan through the depth-N async
+:class:`~repro.storage.pipeline.ReadPipeline`: up to ``queue_depth``
+levels' block reads stay in flight (ordered submit/reap on a dedicated
+io thread, batched extent preads) and codec decompress-on-fill runs on
+a ``decode_workers``-wide pool, so neither the read nor the decode
+ever blocks the query thread's jit step.  All cache-state transitions
+still happen on the query thread in block order
+(``PageCache.begin_fill``), so hit/miss/eviction/byte sequences — and
+therefore answers — are bit-identical to the synchronous
+``prefetch=False`` path at every depth.  Fill failures (e.g. a CRC
+mismatch on a corrupt segment) always surface in the querying thread:
+the level generator re-raises them on reap, and if the consumer
+abandons the sweep mid-stream the generator's cleanup drains every
+in-flight fill so no error is silently swallowed and no placeholder is
+left incomplete.  Bounded sweeps (P2P, threshold, kNN, top-k) bypass
+the pipeline and read synchronously, so a skipped level provably skips
+the device I/O, not just the compute.
 """
 from __future__ import annotations
 
-import concurrent.futures
+from collections import deque
 from typing import Iterator, Optional, Tuple
 
 import jax
@@ -59,8 +60,9 @@ import numpy as np
 
 from .. import shardlib as sl
 from ..core.index import node_levels
-from ..core.query import INF, QueryEngine
+from ..core.query import INF, QueryEngine, _knn_select
 from .blockfile import IndexStore
+from .pipeline import PipelineStats, ReadPipeline
 
 __all__ = ["StreamingQueryEngine"]
 
@@ -77,7 +79,8 @@ class StreamingQueryEngine(QueryEngine):
 
     def __init__(self, store: IndexStore, core_mode: str = "closure",
                  use_pallas: bool = False, eps: float = 0.0,
-                 interpret: Optional[bool] = None, prefetch: bool = True):
+                 interpret: Optional[bool] = None, prefetch: bool = True,
+                 queue_depth: int = 4, decode_workers: int = 2):
         self.store = store
         self.prefetch = bool(prefetch)
         self._init_engine(store.resident, core_mode, use_pallas, eps,
@@ -118,9 +121,17 @@ class StreamingQueryEngine(QueryEngine):
             lambda dist, lo, hi: jnp.any(jnp.isfinite(dist) & (
                 jnp.arange(dist.shape[1])[None, :] >= lo) & (
                 jnp.arange(dist.shape[1])[None, :] < hi)))
-        self._pool = (concurrent.futures.ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="hod-prefetch")
-            if self.prefetch else None)
+        self._clamp_step = jax.jit(
+            lambda dist, d: jnp.where(dist <= d, dist, INF),
+            donate_argnums=0)
+        self._pipe = (ReadPipeline(store, queue_depth=queue_depth,
+                                   decode_workers=decode_workers)
+                      if self.prefetch else None)
+
+    def pipeline_stats(self) -> Optional[PipelineStats]:
+        """The live :class:`PipelineStats` (overlap/stall metrics), or
+        ``None`` when running synchronously (``prefetch=False``)."""
+        return self._pipe.stats if self._pipe is not None else None
 
     # ------------------------------------------------------------- streaming
     def _levels(self, name: str, pin: bool = False,
@@ -130,39 +141,42 @@ class StreamingQueryEngine(QueryEngine):
         ``pin=True`` takes a pin lease on every block read (the
         distance pass of an SSSP query); ``unpin_after=True`` releases
         a level's leases right after the consumer finishes with it
-        (the reconstruction pass).  With prefetching, the next level's
-        blocks stay in flight on the background thread; the in-flight
-        future is always drained — ``fut.result()`` re-raises loader
-        exceptions in the querying thread, and the ``finally`` below
-        collects the pending future when the consumer abandons the
-        sweep, so a failed prefetch read can never be silently lost.
+        (the reconstruction pass).  With the pipeline, up to
+        ``queue_depth`` levels stay in flight: each reap tops the
+        window back up before waiting, and reaping re-raises fill
+        errors in the querying thread.  The ``finally`` drains every
+        in-flight ticket when the consumer abandons the sweep, so a
+        failed fill can never be silently lost and no placeholder is
+        left incomplete.
         """
         n = self.store.n_real(name)
-        read = lambda lvl: self.store.read_level(name, lvl, pin=pin)
-        if self._pool is None or n <= 1:
+        if self._pipe is None:
             for lvl in range(n):
-                yield read(lvl)
+                yield self.store.read_level(name, lvl, pin=pin)
                 if unpin_after:
                     self.store.unpin_level(name, lvl)
             return
-        fut = self._pool.submit(read, 0)
+        pipe = self._pipe
+        pipe.begin_sweep()
+        tickets: "deque" = deque()
+        nxt = 0
+
+        def top_up():
+            nonlocal nxt
+            while nxt < n and len(tickets) < pipe.queue_depth:
+                tickets.append(pipe.submit_level(name, nxt, pin=pin))
+                nxt += 1
+
         try:
+            top_up()
             for lvl in range(n):
-                slab = fut.result()
-                fut = (self._pool.submit(read, lvl + 1)
-                       if lvl + 1 < n else None)
-                yield slab
+                ticket = tickets.popleft()
+                top_up()
+                yield pipe.reap(ticket)
                 if unpin_after:
                     self.store.unpin_level(name, lvl)
         finally:
-            # Consumer may abandon the generator mid-sweep (its own
-            # exception, or a failed fut.result() above): collect the
-            # in-flight future so its error/fd use is not left dangling.
-            if fut is not None and not fut.cancel():
-                try:
-                    fut.exception()
-                except concurrent.futures.CancelledError:
-                    pass
+            pipe.drain(tickets)
 
     def _sweep(self, state: jnp.ndarray, name: str, step,
                pin: bool = False) -> jnp.ndarray:
@@ -311,6 +325,57 @@ class StreamingQueryEngine(QueryEngine):
             dist = self._thresh_step(dist, d, *self._read("plan_b", lvl))
         return np.asarray(dist)[:, ix.perm]
 
+    def knn(self, sources: np.ndarray, k: int
+            ) -> Tuple[np.ndarray, np.ndarray]:
+        """The ``k`` nearest nodes of each source (DESIGN.md §7): a
+        threshold sweep whose per-row radius *shrinks adaptively*.
+
+        Before each level the radius is the row's kth-smallest current
+        label — labels only decrease, so it is always an upper bound on
+        the row's final kth distance, and clamping labels past it is
+        sound by the same nonnegative-weight argument as
+        :meth:`ssd_within` (a top-k node's true chain labels are all
+        ``<=`` its final distance ``<=`` the radius, so they always
+        survive; only overestimates are erased).  Levels whose gather
+        range holds no live label are skipped — reads included, via the
+        synchronous bypass.  Returns ``(nodes, dist)``, each ``[S, k]``
+        in original node ids: ascending ``(distance, node id)`` with
+        the source itself at distance 0; rows with fewer than ``k``
+        reachable nodes pad with ``(-1, +inf)``.  Bit-identical to the
+        in-memory :meth:`QueryEngine.knn` (full sweep + host top-k).
+        """
+        sources = np.asarray(sources, dtype=np.int32)
+        ix = self.index
+        if not 1 <= k <= ix.n:
+            raise ValueError(f"k must be in [1, {ix.n}], got {k}")
+        lp = ix.level_ptr
+        dist = self._init_dist(ix.perm[sources])
+
+        def radius(d):
+            # per-row kth-smallest current label, as a [S, 1] operand
+            # (broadcasts against [S, n_pad] inside the jitted steps)
+            part = np.partition(np.asarray(d), k - 1, axis=1)
+            return jnp.asarray(part[:, k - 1:k])
+
+        for lvl in range(self.store.n_real("plan_f")):
+            g = int(self._level_ids_f[lvl])
+            r = radius(dist)
+            dist = self._clamp_step(dist, r)
+            if not bool(self._range_live(dist, int(lp[g]),
+                                         int(lp[g + 1]))):
+                continue
+            dist = self._thresh_step(dist, r, *self._read("plan_f", lvl))
+        dist = self._apply_core(dist)
+        for lvl in range(self.store.n_real("plan_b")):
+            g = int(self._level_ids_b[lvl])
+            r = radius(dist)
+            dist = self._clamp_step(dist, r)
+            if not bool(self._range_live(dist, int(lp[g + 1]),
+                                         dist.shape[1])):
+                continue
+            dist = self._thresh_step(dist, r, *self._read("plan_b", lvl))
+        return _knn_select(np.asarray(dist)[:, ix.perm], k)
+
     def _far_slice(self, dist: jnp.ndarray, lo: int,
                    hi: int) -> np.ndarray:
         """Per-row farness contribution of perm-id columns [lo, hi) —
@@ -358,6 +423,6 @@ class StreamingQueryEngine(QueryEngine):
         return np.asarray(dist)[:, ix.perm], True
 
     def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
+        if self._pipe is not None:
+            self._pipe.close()
         self.store.close()

@@ -61,6 +61,18 @@ class ShortestPathOracle:
     def farness(self, s: int) -> float:
         return sum(x for x in self.ssd(s) if math.isfinite(x))
 
+    def knn(self, s: int, k: int) -> Tuple[List[int], List[float]]:
+        """The ``k`` nearest nodes of ``s``, ordered by ``(distance,
+        node id)`` — the same tie-break convention as
+        ``QueryEngine.knn`` — padded with ``(-1, inf)`` slots when
+        fewer than ``k`` nodes are reachable.  The source itself (at
+        distance 0) counts as its own nearest node."""
+        ranked = sorted((d, v) for v, d in enumerate(self.ssd(s))
+                        if math.isfinite(d))[:k]
+        nodes = [v for _, v in ranked] + [-1] * (k - len(ranked))
+        dists = [d for d, _ in ranked] + [math.inf] * (k - len(ranked))
+        return nodes, dists
+
     def topk_closeness(self, k: int,
                        candidates: Optional[Sequence[int]] = None
                        ) -> List[Tuple[float, int]]:

@@ -38,6 +38,14 @@ BASELINE = {
              "hit_rate": 0.55, "real_bytes": 7_000_000,
              "cold_query_bytes": 3_400_000, "queries_per_s": 330.0},
         ],
+        "queue_depth": [
+            {"codec": "raw", "queue_depth": 1, "cache_frac": 0.25,
+             "policy": "2q", "hit_rate": 0.55, "real_bytes": 7_000_000,
+             "stall_model_s": 0.9, "queries_per_s": 300.0},
+            {"codec": "raw", "queue_depth": 4, "cache_frac": 0.25,
+             "policy": "2q", "hit_rate": 0.55, "real_bytes": 7_000_000,
+             "stall_model_s": 0.4, "queries_per_s": 380.0},
+        ],
         "cold_start": [{"load_s": 0.05}],
     },
 }
@@ -112,6 +120,41 @@ def test_workload_hit_rate_drop_fails():
     assert len(violations) == 1
     assert "workloads[ssd]" in violations[0]
     assert "hit rate" in violations[0]
+
+
+def test_missing_queue_depth_row_fails():
+    """Dropping a (codec, depth) cell — say the pipeline sweep stopped
+    running depth 4 — must fail the gate (ISSUE-7)."""
+    fresh = copy.deepcopy(BASELINE)
+    del fresh["tables"]["queue_depth"][1]
+    violations = compare(BASELINE, fresh)
+    assert violations == ["queue_depth[codec=raw, depth=4]: "
+                          "row missing from fresh run"]
+
+
+def test_queue_depth_overread_fails_without_baseline():
+    """The fresh-run determinism invariant needs no baseline numbers:
+    a depth-4 row reading even one byte more than the same codec's
+    depth-1 row is a violation (read-ahead must not inflate I/O)."""
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["queue_depth"][0]["real_bytes"] = 6_999_999
+    violations = compare(fresh, fresh)    # identical docs, still fails
+    assert len(violations) == 1
+    assert "queue_depth[codec=raw, depth=4]" in violations[0]
+    assert "read-ahead must not inflate I/O" in violations[0]
+
+
+def test_queue_depth_hit_rate_and_bytes_gated():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["queue_depth"][1]["hit_rate"] = 0.40      # -15pp
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 1 and "hit rate" in violations[0]
+    fresh = copy.deepcopy(BASELINE)
+    for row in fresh["tables"]["queue_depth"]:
+        row["real_bytes"] = 9_000_000                         # +29%
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 2
+    assert all("bytes read" in v for v in violations)
 
 
 def test_extra_fresh_rows_are_ignored():

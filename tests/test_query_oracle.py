@@ -5,9 +5,9 @@ engine under test and the pure-Python Dijkstra oracle
 (``tests/oracle.py``); agreement is asserted *exactly* — integer
 weights make every distance a small integer, representable without
 rounding in f32, f16, and the oracle's f64 alike.  Covered: full SSD
-rows, SSSP tree validity, point-to-point, distance-threshold, and
-top-k closeness; in-memory and store-backed at 5% / 25% page-cache
-budgets over the raw / delta / f16 codecs; plus the P2P
+rows, SSSP tree validity, point-to-point, distance-threshold, k-nearest
+nodes, and top-k closeness; in-memory and store-backed at 5% / 25%
+page-cache budgets over the raw / delta / f16 codecs; plus the P2P
 early-termination I/O guarantee and the O(1)-trace accounting of the
 new mode bodies.
 """
@@ -91,6 +91,18 @@ def test_threshold_matches_oracle(idx, seed, d):
         np.testing.assert_array_equal(got[i, :g.n], orc.within(s, d))
 
 
+@settings(max_examples=10, deadline=None)
+@given(graph_idx, query_seed, st.integers(1, 12))
+def test_knn_matches_oracle(idx, seed, k):
+    g, _, eng, orc = bundle(idx)
+    sources = _nodes(np.random.default_rng(seed), g.n, 4)
+    nodes, dist = eng.knn(sources, k)
+    for i, s in enumerate(sources.tolist()):
+        wn, wd = orc.knn(s, k)
+        np.testing.assert_array_equal(nodes[i], wn)
+        np.testing.assert_array_equal(dist[i], np.array(wd, np.float32))
+
+
 @settings(max_examples=6, deadline=None)
 @given(graph_idx, st.integers(1, 12), query_seed)
 def test_topk_closeness_matches_oracle(idx, k, seed):
@@ -134,6 +146,12 @@ def test_store_backed_modes_match_oracle(store_path, budget_frac):
         for i, src in enumerate(s.tolist()):
             np.testing.assert_array_equal(within[i, :g.n],
                                           orc.within(src, 9.0))
+        nn, nd = seng.knn(s, 6)
+        for i, src in enumerate(s.tolist()):
+            wn, wd = orc.knn(src, 6)
+            np.testing.assert_array_equal(nn[i], wn)
+            np.testing.assert_array_equal(nd[i],
+                                          np.array(wd, np.float32))
         tk = topk_closeness(seng, 8, batch_size=16, seed=0)
         want = orc.topk_closeness(8)
         assert tk.nodes.tolist() == [v for _, v in want]

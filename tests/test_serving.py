@@ -216,3 +216,26 @@ def test_server_results_match_oracle(engine):
     for r, orc in zip(results, oracle):
         finite = np.isfinite(orc)
         assert np.allclose(r.dist[:g.n][finite], orc[finite], rtol=1e-5)
+
+
+def test_knn_mode_serves_nodes_and_distances(engine):
+    """--mode knn answers carry [k] node ids + distances that match the
+    engine's knn rows exactly, through both the execute path and the
+    LRU row cache (QueryResult.nodes must survive the round trip)."""
+    k = 5
+    server = QueryServer(engine, batch_size=4, mode="knn", knn_k=k,
+                         cache_entries=8)
+    sources = np.array([3, 1, 4, 1], dtype=np.int32)
+    want_nodes, want_dist = engine.knn(np.unique(sources), k)
+    by_src = {int(s): (want_nodes[i], want_dist[i])
+              for i, s in enumerate(np.unique(sources))}
+    for results in (server.serve_stream(sources),
+                    server.serve_stream(sources)):   # 2nd pass: LRU hits
+        for r in results:
+            wn, wd = by_src[r.source]
+            assert r.pred is None
+            assert r.nodes.shape == r.dist.shape == (k,)
+            np.testing.assert_array_equal(r.nodes, wn)
+            np.testing.assert_array_equal(r.dist, wd)
+    assert server.stats.cache_hits == 4
+    assert server.stats.batches == 1     # repeats never re-executed
