@@ -22,7 +22,17 @@ Compared per row, matched on stable keys:
   read no more compressed bytes than the depth-1 row.  The pipeline's
   determinism design makes these equal; a deeper queue that reads
   extra bytes (speculative over-read, double-charged fills) fails
-  regardless of what the baseline says.
+  regardless of what the baseline says;
+* ``latency`` rows (key: ``mode``, ISSUE-8) — per-mode ``p99_ms`` must
+  not grow by more than ``--latency-tol`` (default +50%; wall-time,
+  so CI passes a looser value, like the throughput gate).
+
+**Schema drift fails loudly** (ISSUE-8): documents are stamped with
+``repro.obs.metrics.SCHEMA_VERSION`` by ``benchmarks/run.py``.  A
+version mismatch — fresh vs the code's expected version, or baseline
+vs fresh — stops the comparison with an explicit "regenerate the
+baseline" violation, and a row missing an expected field is reported
+the same way instead of crashing with a KeyError.
 
 Hit rate and bytes-read are deterministic for a fixed graph, layout,
 codec, and policy, so their tolerances only absorb intentional
@@ -50,24 +60,71 @@ from typing import List
 HIT_RATE_TOL = 0.05     # absolute percentage points
 THROUGHPUT_TOL = 0.20   # relative
 BYTES_TOL = 0.10        # relative
+LATENCY_TOL = 0.50      # relative p99 growth (wall-time)
+
+REGEN_HINT = ("regenerate the baseline: PYTHONPATH=src python -m "
+              "benchmarks.run --tables serve")
+
+try:
+    from repro.obs.metrics import SCHEMA_VERSION as EXPECTED_SCHEMA
+except ImportError:     # stand-alone use without src on the path
+    EXPECTED_SCHEMA = None
 
 
 def _store_key(row: dict) -> tuple:
     return (row.get("codec", "raw"), row["cache_frac"], row["policy"])
 
 
+def _schema_violations(baseline: dict, fresh: dict) -> List[str]:
+    """Loud schema-drift failures (ISSUE-8) — any mismatch between the
+    code's expected snapshot schema, the fresh document, and the
+    committed baseline stops the row comparison entirely."""
+    out: List[str] = []
+    bv = baseline.get("schema_version")
+    fv = fresh.get("schema_version")
+    if (EXPECTED_SCHEMA is not None and fv is not None
+            and fv != EXPECTED_SCHEMA):
+        out.append(f"schema drift: fresh document schema_version {fv} "
+                   f"!= expected {EXPECTED_SCHEMA} — rerun the bench "
+                   "with this code version")
+    if bv is not None and fv is None:
+        out.append("schema drift: baseline carries schema_version "
+                   f"{bv} but the fresh document has none — "
+                   + REGEN_HINT)
+    elif bv is not None and fv is not None and bv != fv:
+        out.append(f"schema drift: baseline schema_version {bv} != "
+                   f"fresh {fv} — " + REGEN_HINT)
+    return out
+
+
 def compare(baseline: dict, fresh: dict,
             hit_rate_tol: float = HIT_RATE_TOL,
             throughput_tol: float = THROUGHPUT_TOL,
             bytes_tol: float = BYTES_TOL,
+            latency_tol: float = LATENCY_TOL,
             check_throughput: bool = True) -> List[str]:
     """Violation messages for ``fresh`` vs ``baseline`` (empty = pass).
 
     Both arguments are ``BENCH_serve.json`` documents (the full
     ``{"tables": {...}}`` schema or a bare tables dict).
     """
-    base_t = baseline.get("tables", baseline)
-    fresh_t = fresh.get("tables", fresh)
+    out = _schema_violations(baseline, fresh)
+    if out:
+        return out
+    try:
+        return _compare_tables(
+            baseline.get("tables", baseline),
+            fresh.get("tables", fresh), hit_rate_tol, throughput_tol,
+            bytes_tol, latency_tol, check_throughput)
+    except KeyError as exc:
+        return [f"schema drift: bench row missing field "
+                f"{exc.args[0]!r} — " + REGEN_HINT]
+
+
+def _compare_tables(base_t: dict, fresh_t: dict, hit_rate_tol: float,
+                    throughput_tol: float, bytes_tol: float,
+                    latency_tol: float,
+                    check_throughput: bool) -> List[str]:
     out: List[str] = []
 
     fresh_serve = {r["batch"]: r for r in fresh_t.get("serve", ())}
@@ -166,6 +223,20 @@ def compare(baseline: dict, fresh: dict,
                 out.append(
                     f"{name}: {label} {got[field]} > {ceil:.0f} "
                     f"(baseline {row[field]} + {bytes_tol:.0%})")
+
+    fresh_lat = {r["mode"]: r for r in fresh_t.get("latency", ())}
+    for row in base_t.get("latency", ()):
+        name = f"latency[{row['mode']}]"
+        got = fresh_lat.get(row["mode"])
+        if got is None:
+            out.append(f"{name}: row missing from fresh run")
+            continue
+        ceil = (1.0 + latency_tol) * row["p99_ms"]
+        if got["p99_ms"] > ceil:
+            out.append(
+                f"{name}: p99 {got['p99_ms']:.2f} ms > {ceil:.2f} "
+                f"(baseline {row['p99_ms']:.2f} ms "
+                f"+ {latency_tol:.0%})")
     return out
 
 
@@ -184,6 +255,9 @@ def main(argv=None) -> int:
                     help="max relative throughput drop (default 0.20)")
     ap.add_argument("--bytes-tol", type=float, default=BYTES_TOL,
                     help="max relative bytes-read growth (default 0.10)")
+    ap.add_argument("--latency-tol", type=float, default=LATENCY_TOL,
+                    help="max relative per-mode p99 latency growth "
+                         "(default 0.50; wall-time — loosen on CI)")
     ap.add_argument("--no-throughput", action="store_true",
                     help="skip the machine-dependent throughput check")
     args = ap.parse_args(argv)
@@ -196,6 +270,7 @@ def main(argv=None) -> int:
                          hit_rate_tol=args.hit_rate_tol,
                          throughput_tol=args.throughput_tol,
                          bytes_tol=args.bytes_tol,
+                         latency_tol=args.latency_tol,
                          check_throughput=not args.no_throughput)
     if violations:
         print(f"bench regression vs {args.baseline}:")

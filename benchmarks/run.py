@@ -7,8 +7,11 @@ the perf trajectory is trackable across PRs:
   start (``--tables serve``);
 * ``BENCH_query.json`` — per-dataset query times (``--tables 4``).
 
-Schema: ``{"git_sha": ..., "generated_unix": ..., "tables":
-{name: [row-dict, ...]}}``.
+Schema: ``{"git_sha": ..., "generated_unix": ..., "schema_version":
+..., "tables": {name: [row-dict, ...]}}``.  ``schema_version`` is
+``repro.obs.metrics.SCHEMA_VERSION`` — ``check_regression.py`` refuses
+to compare documents across a version bump (loud schema-drift failure
+instead of a KeyError).
 
     PYTHONPATH=src python -m benchmarks.run [--tables 2,3,4,5,6,hod,serve,roof]
 """
@@ -41,8 +44,10 @@ def _git_sha() -> str:
 
 
 def _write_bench(path: str, tables: dict) -> None:
+    from repro.obs.metrics import SCHEMA_VERSION
+
     doc = {"git_sha": _git_sha(), "generated_unix": int(time.time()),
-           "tables": tables}
+           "schema_version": SCHEMA_VERSION, "tables": tables}
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")

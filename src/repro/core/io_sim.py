@@ -60,6 +60,11 @@ class BlockDevice:
         self.block_bytes = block_bytes
         self.stats = IOStats()
         self._cursor = -1  # last block touched, for seq/rand classification
+        # Observability hook (DESIGN.md §11): called as
+        # ``on_access(block_id, nbytes, sequential)`` after each
+        # address-aware access.  Must be cheap and must not touch the
+        # device — it fires on whichever thread charged the access.
+        self.on_access = None
 
     def _blocks(self, nbytes: int) -> int:
         return max(1, -(-int(nbytes) // self.block_bytes))
@@ -79,11 +84,14 @@ class BlockDevice:
     def access_block(self, block_id: int, nbytes: int | None = None) -> None:
         """Address-aware access: consecutive block ids count as sequential."""
         nbytes = self.block_bytes if nbytes is None else nbytes
-        if block_id == self._cursor + 1:
+        seq = block_id == self._cursor + 1
+        if seq:
             self.sequential(nbytes)
         else:
             self.random(nbytes)
         self._cursor = block_id
+        if self.on_access is not None:
+            self.on_access(block_id, nbytes, seq)
 
     def external_sort(self, nbytes: int, mem_bytes: int) -> None:
         """Charge a standard multi-way merge sort: 2 passes if it fits a

@@ -47,6 +47,7 @@ import numpy as np
 
 from .. import shardlib as sl
 from ..kernels.edge_relax.ops import relax_bucketed
+from ..obs.trace import span_if
 from .index import HoDIndex, SweepPlan, node_levels, plan_level_ids
 
 __all__ = ["QueryEngine", "dijkstra_reference"]
@@ -136,6 +137,10 @@ class QueryEngine:
     same path runs on CPU.
     """
 
+    #: Optional :class:`repro.obs.trace.Tracer` (DESIGN.md §11) — set by
+    #: the streaming engine / server; ``None`` keeps every hook inert.
+    tracer = None
+
     def __init__(self, index: HoDIndex, core_mode: str = "closure",
                  use_pallas: bool = False, eps: float = 0.0,
                  interpret: Optional[bool] = None, k_cap: int = 16):
@@ -218,7 +223,7 @@ class QueryEngine:
         return state
 
     def _run_plan_stream(self, state: jnp.ndarray, levels,
-                         step) -> jnp.ndarray:
+                         step, label: str = "") -> jnp.ndarray:
         """Level-granular donate/feed twin of :meth:`_run_plan`.
 
         ``levels`` yields host-side ``(dst, src_idx, w, assoc, valid)``
@@ -227,12 +232,16 @@ class QueryEngine:
         ``state`` donated, so peak plan memory is one level slab, not
         the whole ``[L_pad, M_pad, K_fix]`` envelope.  Every slab of one
         plan shares a shape, so ``step`` traces once per plan — the
-        same O(1)-trace property as the ``lax.scan`` executor.
+        same O(1)-trace property as the ``lax.scan`` executor.  With a
+        tracer, each level's step runs inside a ``level.relax`` span
+        tagged ``label`` (the plan name).
         """
-        for (dst, src_idx, w, assoc, valid) in levels:
-            state = step(state, jnp.asarray(dst), jnp.asarray(src_idx),
-                         jnp.asarray(w), jnp.asarray(assoc),
-                         jnp.asarray(valid))
+        tracer = self.tracer
+        for lvl, (dst, src_idx, w, assoc, valid) in enumerate(levels):
+            with span_if(tracer, "level.relax", plan=label, level=lvl):
+                state = step(state, jnp.asarray(dst),
+                             jnp.asarray(src_idx), jnp.asarray(w),
+                             jnp.asarray(assoc), jnp.asarray(valid))
         return state
 
     def _relax_level(self, dist, dst, src_idx, w, assoc, valid):

@@ -45,6 +45,7 @@ import argparse
 import asyncio
 import collections
 import dataclasses
+import json
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -54,6 +55,8 @@ from ..core import (BuildConfig, QueryEngine, grid_road_graph, pack_index,
                     power_law_digraph)
 from ..core.build_fast import build_hod_fast
 from ..core.io_sim import BlockDevice, IOStats
+from ..obs.metrics import Histogram, MetricsRegistry
+from ..obs.trace import span_if
 
 __all__ = ["QueryResult", "ServerStats", "BatchIO", "QueryServer"]
 
@@ -98,6 +101,30 @@ class ServerStats:
     def page_hit_rate(self) -> float:
         total = self.page_hits + self.page_misses
         return self.page_hits / total if total else 0.0
+
+    def report(self, label: str = "", batch_size: Optional[int] = None,
+               latency: Optional[Histogram] = None) -> str:
+        """Human-readable serving summary (the CLI footer), shared with
+        ``benchmarks/serve_throughput.py``.  ``latency`` is the served
+        mode's ``latency_ms.*`` histogram from the server's
+        :class:`~repro.obs.metrics.MetricsRegistry` — percentiles come
+        from its fixed buckets, no per-request list needed."""
+        extras = []
+        if batch_size is not None:
+            extras.append(f"batch={batch_size}")
+        extras += [f"{self.cache_hits} cache hits",
+                   f"{self.padded_slots} padded slots"]
+        what = f"{label} requests" if label else "requests"
+        lines = [f"served {self.requests} {what} in "
+                 f"{self.batches} batches ({', '.join(extras)})"]
+        if latency is not None and latency.count:
+            s = latency.summary()
+            lines.append(f"latency: mean {s['mean']:.2f} ms  "
+                         f"p50 {s['p50']:.2f}  p95 {s['p95']:.2f}  "
+                         f"p99 {s['p99']:.2f} ms")
+        lines.append(f"throughput: {self.throughput():.0f} queries/s "
+                     "(engine-busy basis)")
+        return "\n".join(lines)
 
 
 @dataclasses.dataclass
@@ -161,7 +188,9 @@ class QueryServer:
                  pin_frac: Optional[float] = None,
                  queue_depth: Optional[int] = None,
                  decode_workers: Optional[int] = None,
-                 engine_opts: Optional[dict] = None):
+                 engine_opts: Optional[dict] = None,
+                 tracer=None,
+                 metrics: Optional[MetricsRegistry] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         if mode is None:
@@ -198,6 +227,22 @@ class QueryServer:
                              "not both")
         self.engine = engine
         self.store = getattr(engine, "store", None)   # None = in-memory
+        # Observability (DESIGN.md §11): the tracer threads down through
+        # the engine into pipeline/cache/device hooks; the registry
+        # collects per-mode latency histograms + server counters.  Both
+        # are optional — tracer=None keeps every hook inert, and an
+        # unshared registry is created so histograms always exist.
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if tracer is not None:
+            if hasattr(engine, "set_tracer"):
+                engine.set_tracer(tracer)
+            else:
+                engine.tracer = tracer
+        pipe = getattr(engine, "_pipe", None)
+        if pipe is not None:
+            self.metrics.gauge("pipeline.queue_depth").set(
+                pipe.queue_depth)
         self.batch_size = int(batch_size)
         self.max_wait_ms = float(max_wait_ms)
         self.cache_entries = int(cache_entries)
@@ -278,19 +323,25 @@ class QueryServer:
                   if hasattr(self.engine, "pipeline_stats") else None)
         pbefore = pstats.snapshot() if pstats is not None else None
         t0 = time.perf_counter()
-        if self.mode == "sssp":
-            dist, pred = self.engine.sssp(batch)
-        elif self.mode == "p2p":
-            dist, pred = self.engine.p2p(batch[:, 0], batch[:, 1]), None
-        elif self.mode == "within":
-            dist, pred = self.engine.ssd_within(batch, self.within_d), None
-        elif self.mode == "knn":
-            # rows carry (distances, node ids); _row_fields unpacks
-            nodes, dist = self.engine.knn(batch, self.knn_k)
-            pred = nodes
-        else:
-            dist, pred = self.engine.ssd(batch), None
-        self.stats.busy_seconds += time.perf_counter() - t0
+        with span_if(self.tracer, f"query.{self.mode}",
+                     batch=self.stats.batches + 1, fill=fill), \
+             span_if(self.tracer, "jit.dispatch", mode=self.mode):
+            if self.mode == "sssp":
+                dist, pred = self.engine.sssp(batch)
+            elif self.mode == "p2p":
+                dist, pred = (self.engine.p2p(batch[:, 0], batch[:, 1]),
+                              None)
+            elif self.mode == "within":
+                dist, pred = (self.engine.ssd_within(batch,
+                                                     self.within_d), None)
+            elif self.mode == "knn":
+                # rows carry (distances, node ids); _row_fields unpacks
+                nodes, dist = self.engine.knn(batch, self.knn_k)
+                pred = nodes
+            else:
+                dist, pred = self.engine.ssd(batch), None
+        busy = time.perf_counter() - t0
+        self.stats.busy_seconds += busy
         pdelta = (pstats - pbefore) if pstats is not None else None
         if pdelta is not None:
             self.stats.stall_seconds += pdelta.stall_model_s
@@ -299,6 +350,12 @@ class QueryServer:
                 self.stats.ttfl_seconds = pdelta.ttfl_s
         self.stats.batches += 1
         self.stats.padded_slots += self.batch_size - fill
+        m = self.metrics
+        m.counter("server.batches").inc()
+        m.counter("server.padded_slots").inc(self.batch_size - fill)
+        m.counter("server.busy_seconds").inc(busy)
+        if pdelta is not None:
+            m.counter("pipeline.stall_seconds").inc(pdelta.stall_model_s)
         if self.store is None:
             # In-memory engine: no real reads happen, charge the modeled
             # sequential scan so I/O reporting stays meaningful.
@@ -319,6 +376,12 @@ class QueryServer:
                 filled_bytes=delta.bytes_filled,
                 stall_s=pdelta.stall_model_s if pdelta else 0.0))
             self._last_batch_bytes = float(delta.bytes_read)
+            m.counter("page_cache.hits").inc(delta.hits)
+            m.counter("page_cache.misses").inc(delta.misses)
+            m.counter("store.bytes_read").inc(delta.bytes_read)
+            m.counter("store.bytes_filled").inc(delta.bytes_filled)
+            m.gauge("page_cache.hit_rate").set(
+                self.stats.page_hit_rate())
         rows = []
         for i, req in enumerate(self._keys(requests)):
             if self.mode == "p2p":     # scalar answer per pair
@@ -329,6 +392,18 @@ class QueryServer:
             self._cache_put(req, row)
             rows.append(row)
         return rows
+
+    def _observe(self, latency_s: float, cached: bool) -> None:
+        """Per-request metrics: request counters + the per-mode (and
+        per-class: ``.cached``) latency histograms the p99 bench gate
+        reads back (DESIGN.md §11)."""
+        m = self.metrics
+        m.counter("server.requests").inc()
+        ms = latency_s * 1e3
+        m.histogram(f"latency_ms.{self.mode}").observe(ms)
+        if cached:
+            m.counter("server.result_cache_hits").inc()
+            m.histogram(f"latency_ms.{self.mode}.cached").observe(ms)
 
     def _row_fields(self, row: tuple) -> tuple:
         """Split a cached row into ``(dist, pred, nodes)`` — knn rows
@@ -344,16 +419,28 @@ class QueryServer:
         self._execute(np.zeros(shape, dtype=np.int32))
         self.stats = ServerStats()
         self.batch_io.clear()
-        self.device.reset()
         self._cache.clear()   # the warmup row must not count as a hit
-        if self.store is not None:
-            # Zero the page-cache counters too; warmed *blocks* stay
-            # resident (that is what a real warm start buys).
-            self.store.cache.reset_stats()
         ps = (self.engine.pipeline_stats()
               if hasattr(self.engine, "pipeline_stats") else None)
-        if ps is not None:
-            ps.reset()   # warmup sweeps must not count as stall/ttfl
+        if self.store is not None:
+            # Zero the page-cache counters — warmed *blocks* stay
+            # resident (that is what a real warm start buys) — and the
+            # device + pipeline counters under the SAME cache lock:
+            # every fill charges cache and device inside that lock, so
+            # the compound reset cannot interleave with a half-charged
+            # fill (ISSUE-8 reset-race fix).
+            also = [self.device.reset]
+            if ps is not None:
+                also.append(ps.reset)  # no stall/ttfl from warmup sweeps
+            self.store.cache.reset_stats(also=also)
+        else:
+            self.device.reset()
+            if ps is not None:
+                ps.reset()
+        self.metrics.reset()
+        if self.tracer is not None:
+            # Compile-time spans must not pollute the served trace.
+            self.tracer.clear()
 
     def serve_stream(self, requests: np.ndarray) -> List[QueryResult]:
         """Closed-loop driver: answer a request list in arrival order.
@@ -387,6 +474,7 @@ class QueryServer:
                 row = miss_rows.get(k) or self._cache_get(k)
                 self.stats.requests += 1
                 self.stats.cache_hits += cached
+                self._observe(lat, cached)
                 src, tgt = k if isinstance(k, tuple) else (k, None)
                 d, p, nd = self._row_fields(row)
                 out.append(QueryResult(
@@ -412,11 +500,12 @@ class QueryServer:
         if hit is not None:
             self.stats.requests += 1
             self.stats.cache_hits += 1
+            lat = time.perf_counter() - t0
+            self._observe(lat, cached=True)
             d, p, nd = self._row_fields(hit)
             return QueryResult(source=int(source), target=target,
                                dist=d, pred=p, nodes=nd,
-                               latency_s=time.perf_counter() - t0,
-                               cached=True)
+                               latency_s=lat, cached=True)
         fut = asyncio.get_running_loop().create_future()
         self._pending.append((req, fut, t0))
         if len(self._pending) >= self.batch_size:
@@ -439,6 +528,16 @@ class QueryServer:
             take, self._pending = (self._pending[: self.batch_size],
                                    self._pending[self.batch_size:])
             reqs = np.asarray([r for r, _, _ in take], dtype=np.int32)
+            # Coalesce wait: the oldest rider's queue time, as a
+            # retroactive X span (its duration is only known now).
+            wait_s = time.perf_counter() - min(t0 for _, _, t0 in take)
+            self.metrics.histogram("coalesce_wait_ms").observe(
+                wait_s * 1e3)
+            if self.tracer is not None:
+                self.tracer.complete(
+                    "coalesce.wait",
+                    self.tracer.now() - int(wait_s * 1e9),
+                    waiters=len(take))
             try:
                 rows = self._execute(reqs)
             except Exception as exc:
@@ -452,6 +551,7 @@ class QueryServer:
             now = time.perf_counter()
             for (req, fut, t0), row in zip(take, rows):
                 self.stats.requests += 1
+                self._observe(now - t0, cached=False)
                 src, tgt = req if isinstance(req, tuple) else (req, None)
                 if not fut.done():
                     d, p, nd = self._row_fields(row)
@@ -556,6 +656,14 @@ def main() -> None:
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the read pipeline entirely (with "
                          "--store): every block read is synchronous")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a per-query trace of the served run: "
+                         "Chrome trace-event JSON (open in "
+                         "https://ui.perfetto.dev), or a flat JSONL "
+                         "event log if the path ends in .jsonl")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the server's metrics snapshot (counters"
+                         ", gauges, latency histograms) as JSON")
     args = ap.parse_args()
     if args.sssp and args.mode != "ssd":
         ap.error("--sssp only combines with the default ssd mode")
@@ -564,6 +672,10 @@ def main() -> None:
     server_mode = {"ssd": "sssp" if args.sssp else "ssd",
                    "p2p": "p2p", "threshold": "within",
                    "knn": "knn"}.get(args.mode, "ssd")
+    tracer = None
+    if args.trace_out:
+        from ..obs.trace import Tracer
+        tracer = Tracer()
 
     g = (grid_road_graph(args.side) if args.graph == "road"
          else power_law_digraph(args.side * args.side, 4, weighted=True))
@@ -598,13 +710,15 @@ def main() -> None:
                              queue_depth=args.queue_depth,
                              decode_workers=args.decode_workers,
                              engine_opts={"use_pallas": args.use_pallas,
-                                          "prefetch": not args.no_prefetch})
+                                          "prefetch": not args.no_prefetch},
+                             tracer=tracer)
     else:
         eng = QueryEngine(ix, use_pallas=args.use_pallas)
         server = QueryServer(eng, batch_size=args.batch, mode=server_mode,
                              within_d=args.threshold, knn_k=args.k,
                              cache_entries=args.cache,
-                             max_wait_ms=args.max_wait_ms)
+                             max_wait_ms=args.max_wait_ms,
+                             tracer=tracer)
 
     rng = np.random.default_rng(0)
     shape = ((args.requests, 2) if args.mode == "p2p"
@@ -652,19 +766,13 @@ def main() -> None:
                       f"({cs.hits} hits / {cs.misses} misses), "
                       f"{cs.bytes_read/1e6:.2f} MB read")
             return
-        lat = np.array([r.latency_s for r in results]) * 1e3
         label = {"ssd": "SSD", "sssp": "SSSP", "p2p": "P2P",
                  "within": f"within(d={args.threshold:g})",
                  "knn": f"kNN(k={args.k})"}[server_mode]
-        print(f"served {st.requests} {label} "
-              f"requests in {st.batches} batches (batch={args.batch}, "
-              f"{st.cache_hits} cache hits, {st.padded_slots} padded slots)")
-        print(f"latency: mean {lat.mean():.2f} ms  "
-              f"p50 {np.percentile(lat, 50):.2f}  "
-              f"p95 {np.percentile(lat, 95):.2f}  "
-              f"p99 {np.percentile(lat, 99):.2f} ms")
-        print(f"throughput: {st.throughput():.0f} queries/s "
-              "(engine-busy basis)")
+        print(st.report(
+            label=label, batch_size=args.batch,
+            latency=server.metrics.histogram(
+                f"latency_ms.{server_mode}")))
         kind = "measured" if server.store is not None else "modeled"
         io_s = io.modeled_seconds(block_bytes=server.device.block_bytes)
         print(f"{kind} disk: {io.seq_blocks} seq + {io.rand_blocks} rand "
@@ -689,6 +797,18 @@ def main() -> None:
                       f"wait {st.stall_wall_seconds*1e3:.1f} ms, "
                       f"time-to-first-level {st.ttfl_seconds*1e3:.2f} ms")
     finally:
+        if tracer is not None:
+            if args.trace_out.endswith(".jsonl"):
+                tracer.write_jsonl(args.trace_out)
+            else:
+                tracer.write_chrome(args.trace_out)
+            print(f"trace: {len(tracer.events())} events -> "
+                  f"{args.trace_out}")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(server.metrics.snapshot(), f, indent=2)
+                f.write("\n")
+            print(f"metrics -> {args.metrics_out}")
         # The --store index is a throwaway in /tmp: always release the
         # segment fds / prefetch thread and remove it, even on Ctrl-C.
         if server.store is not None:

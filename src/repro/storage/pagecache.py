@@ -86,6 +86,24 @@ miss / eviction / ``bytes_read`` sequences are therefore bit-identical
 at every queue depth, including depth 1 and the no-pipeline path.  A
 failed fill (CRC mismatch) is :meth:`discard`-ed by the worker and the
 error re-raises in every waiting thread.
+
+**Observability hook** (DESIGN.md §11): setting :attr:`on_event` to a
+callable ``(kind, key, nbytes)`` reports every ``"hit"`` / ``"miss"``
+/ ``"evict"`` transition, fired *under the lock* at the exact point
+the counters move — so the event order equals the counter order, and
+the cross-depth determinism contract extends to the event stream.
+The hook must be cheap and must never call back into the cache (the
+tracer's buffered ``instant`` qualifies).  ``None`` (default)
+disables it at the cost of one attribute check.
+
+**Atomic resets**: pipelined fills charge the shared
+:class:`~repro.core.io_sim.BlockDevice` through :meth:`begin_fill`'s
+``charge`` callback — under this same lock — and
+:meth:`reset_stats`'s ``also=`` callbacks (device reset, pipeline
+stats reset) run under it too, so a compound stats reset can never
+land *between* a cache counter and its paired device charge, even
+with fills in flight (ISSUE-8's reset-raciness fix, regression-tested
+in tests/test_pipeline.py).
 """
 from __future__ import annotations
 
@@ -199,6 +217,10 @@ class PageCache:
         self.policy = policy
         self.pin_frac = pin_frac
         self.stats = CacheStats()
+        #: optional observer ``(kind, key, nbytes)`` for hit/miss/evict
+        #: transitions (module docstring); fired under the lock.
+        self.on_event: Optional[Callable[[str, Hashable, int], None]] = \
+            None
         self._lock = threading.Lock()
         # lru/clock primary store: key -> bytes, order per policy
         self._blocks: "collections.OrderedDict[Hashable, bytes]" = \
@@ -251,6 +273,8 @@ class PageCache:
             data = self._peek_hit(key)
             if data is not None:
                 self.stats.hits += 1
+                if self.on_event is not None:
+                    self.on_event("hit", key, len(data))
                 if pin:
                     self._try_pin(key)
             else:
@@ -262,6 +286,8 @@ class PageCache:
                     data, disk_bytes = loaded, len(loaded)
                 self.stats.bytes_read += disk_bytes
                 self.stats.bytes_filled += len(data)
+                if self.on_event is not None:
+                    self.on_event("miss", key, disk_bytes)
                 self._admit(key, data, pin)
                 self.stats.peak_bytes = max(self.stats.peak_bytes,
                                             self._resident())
@@ -271,7 +297,8 @@ class PageCache:
         return data
 
     def begin_fill(self, key: Hashable, size: int, disk_bytes: int,
-                   pin: bool = False):
+                   pin: bool = False,
+                   charge: Optional[Callable[[], None]] = None):
         """Pipelined-fill admission (the read pipeline's submit step).
 
         Returns ``(entry, owner)``.  On a hit, ``entry`` is the
@@ -287,17 +314,30 @@ class PageCache:
         after :meth:`discard`).  Determinism contract: calling this in
         block order yields hit/miss/eviction/byte sequences
         bit-identical to the synchronous path, at any queue depth.
+
+        ``charge`` (miss only) runs under the lock right after the byte
+        counters move — the pipeline charges the shared block device
+        here, so the device and cache counters advance *atomically*
+        (exactly like the synchronous path, whose loader runs under
+        this lock) and a concurrent :meth:`reset_stats` can never split
+        them.
         """
         with self._lock:
             data = self._peek_hit(key)
             if data is not None:
                 self.stats.hits += 1
+                if self.on_event is not None:
+                    self.on_event("hit", key, len(data))
                 if pin:
                     self._try_pin(key)
                 return data, False
             self.stats.misses += 1
             self.stats.bytes_read += disk_bytes
             self.stats.bytes_filled += size
+            if charge is not None:
+                charge()
+            if self.on_event is not None:
+                self.on_event("miss", key, disk_bytes)
             holder = PendingBlock(size)
             self._admit(key, holder, pin)
             self.stats.peak_bytes = max(self.stats.peak_bytes,
@@ -396,12 +436,24 @@ class PageCache:
             self.stats.pinned_bytes = 0
             self._p = 0.0
 
-    def reset_stats(self) -> CacheStats:
+    def reset_stats(self, also: Iterable[Callable[[], object]] = ()
+                    ) -> CacheStats:
         """Zero the counters (cache contents stay resident; the
-        pinned-bytes gauge carries over)."""
+        pinned-bytes gauge carries over).
+
+        ``also`` callbacks (device reset, pipeline-stats reset) run
+        *under the cache lock*, making the compound reset atomic with
+        respect to in-flight fills: every fill charges its cache
+        counters and its device bytes under this same lock
+        (:meth:`get`'s loader, :meth:`begin_fill`'s ``charge``), so a
+        reset can never land between the two halves of a charge and
+        leave the device/cache byte invariant drifted (ISSUE-8).
+        """
         with self._lock:
             out, self.stats = self.stats, CacheStats(
                 pinned_bytes=self._pinned_bytes)
+            for fn in also:
+                fn()
             return out
 
     # ------------------------------------------------------------- internals
@@ -591,6 +643,8 @@ class PageCache:
                 self._win_bytes -= len(data)
                 self._ghost(self._b1, victim, len(data))
                 self.stats.evictions += 1
+                if self.on_event is not None:
+                    self.on_event("evict", victim, len(data))
                 return True
         return False
 
@@ -614,6 +668,8 @@ class PageCache:
         else:
             return False
         self.stats.evictions += 1
+        if self.on_event is not None:
+            self.on_event("evict", victim, len(data))
         return True
 
     def _shrink_main(self, cap, keep: Hashable) -> None:
@@ -692,6 +748,9 @@ class PageCache:
                     break
             if victim is None:
                 return
-        self._bytes -= len(self._blocks.pop(victim))
+        data = self._blocks.pop(victim)
+        self._bytes -= len(data)
         self._ref.pop(victim, None)
         self.stats.evictions += 1
+        if self.on_event is not None:
+            self.on_event("evict", victim, len(data))

@@ -13,28 +13,42 @@ thread's jit step.
 Three stages, three execution domains::
 
     query thread        submit_level(): per-block cache transaction
-      (submit)          (hit/miss/eviction/pin/byte counters) via
-                        PageCache.begin_fill — a PendingBlock of the
-                        known decoded size is admitted immediately;
-                        contiguous missed-block runs become one
-                        batched extent pread job
-    io thread (1)       ordered preads (SegmentReader.read_frames) +
-      (read)            device charges in submission order, so the
-                        seq/random classification is identical to the
-                        synchronous path; hands each frame to...
+      (submit)          (hit/miss/eviction/pin/byte counters) AND the
+                        modeled-device charge via
+                        PageCache.begin_fill(charge=...) — a
+                        PendingBlock of the known decoded size is
+                        admitted immediately; contiguous missed-block
+                        runs become one batched extent pread job
+    io thread (1)       ordered preads (SegmentReader.read_frames);
+      (read)            hands each frame to...
     decode pool (M)     CRC verify + codec decode
       (decode)          (SegmentReader.decode_frame), completing the
                         PendingBlock in place; a corrupt frame is
                         discarded from the cache and the error
                         re-raises in whichever thread waits
 
-**Determinism.** All cache-state mutations happen at submit time on
-the query thread, in the exact block order the synchronous path uses,
-so hit/miss/eviction/``bytes_read`` sequences are bit-identical at
-every queue depth (the ``bytes_read`` charge uses the frame table's
-``comp_len`` — known before the read happens).  Only payload
-materialization is asynchronous; answers are bit-identical because the
-slabs are byte-identical.
+**Determinism.** All counter mutations — cache *and* modeled device —
+happen at submit time on the query thread, in the exact block order
+the synchronous path uses, so hit/miss/eviction/``bytes_read`` and
+seq/random-block sequences are bit-identical at every queue depth
+(the ``bytes_read``/device charges use the frame table's ``comp_len``
+— known before the read happens).  Charging the device inside
+``begin_fill``'s lock (rather than on the io thread, as earlier
+revisions did) also makes the compound stats reset atomic:
+``PageCache.reset_stats(also=[device.reset, pipeline.stats.reset])``
+cannot interleave with a half-charged fill (ISSUE-8 satellite).  The
+price: a read that subsequently *fails* has already been charged —
+accepted, it is the fault path only.  Only payload materialization is
+asynchronous; answers are bit-identical because the slabs are
+byte-identical.
+
+**Tracing** (DESIGN.md §11): given a ``tracer``, each submitted level
+draws a span id that stitches its story across threads — a
+``pipe.submit`` span (synthetic ``submit`` track, so the query
+thread's own sequence stays depth-invariant), a ``level.read`` span on
+the io thread, ``level.decode`` spans on the decode pool, and a
+``level.wait`` span around the reaper's collect.  ``tracer=None``
+compiles every hook down to one attribute check.
 
 **Stall accounting.** Per reaped level the pipeline records the
 measured consumer compute time and the level's *modeled* device time
@@ -55,6 +69,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import List
 
 from ..core.io_sim import IOStats
+from ..obs.trace import span_if
 from .pagecache import PendingBlock
 
 __all__ = ["PipelineStats", "ReadPipeline"]
@@ -88,16 +103,21 @@ class PipelineStats:
 
 class _LevelTicket:
     """One submitted level: its cache entries (bytes or in-flight
-    :class:`PendingBlock` placeholders) plus the modeled device seconds
-    of the reads this level owned (set by the io thread before any of
-    its decode jobs can complete)."""
+    :class:`PendingBlock` placeholders), the modeled device seconds of
+    the reads this level owned (computed at submit time, before the
+    ticket is visible to anyone), and the trace span id stitching its
+    read/decode/wait events together."""
 
-    __slots__ = ("seg", "lvl", "skip", "entries", "io_s")
+    __slots__ = ("seg", "name", "lvl", "skip", "entries", "io_s",
+                 "span_id")
 
-    def __init__(self, seg, lvl: int, entries: list, skip: int):
+    def __init__(self, seg, lvl: int, entries: list, skip: int,
+                 name: str = "", span_id: int = 0):
         self.seg, self.lvl, self.skip = seg, lvl, skip
+        self.name = name
         self.entries = entries
         self.io_s = 0.0
+        self.span_id = span_id
 
     def collect(self):
         """Wait for every entry, assemble + parse the slab.  Returns
@@ -131,12 +151,13 @@ class ReadPipeline:
     """
 
     def __init__(self, store, queue_depth: int = 4,
-                 decode_workers: int = 2):
+                 decode_workers: int = 2, tracer=None):
         if queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
         if decode_workers < 1:
             raise ValueError("decode_workers must be >= 1")
         self.store = store
+        self.tracer = tracer
         self.queue_depth = int(queue_depth)
         self.decode_workers = int(decode_workers)
         self.stats = PipelineStats()
@@ -173,57 +194,68 @@ class ReadPipeline:
         enqueues one batched pread per contiguous missed-block run."""
         seg = self.store.segments[name]
         self.stats.submitted += 1
+        tr = self.tracer
+        sid = tr.new_id() if tr is not None else 0
         if seg.version >= 4 and seg.extents[lvl][1] == 0:
-            return _LevelTicket(seg, lvl, [], 0)   # zero-row level
+            return _LevelTicket(seg, lvl, [], 0, name=name,
+                                span_id=sid)   # zero-row level
         b0, b1, skip = seg._level_blocks(lvl)
         pin = pin or seg.pin_blocks
+        dev = seg.device
+        st = dev.stats
+        seq0, rand0 = st.seq_blocks, st.rand_blocks
         entries: list = []
         runs: list = []             # [(b_lo, [(block, key, holder)...])]
-        for b in range(b0, b1 + 1):
-            key = (seg._cache_ns, b)
-            size, disk = seg.frame_info(b)
-            entry, owner = self.store.cache.begin_fill(key, size, disk,
-                                                       pin=pin)
-            entries.append(entry)
-            if owner:
-                if runs and runs[-1][1][-1][0] == b - 1:
-                    runs[-1][1].append((b, key, entry))
-                else:
-                    runs.append((b, [(b, key, entry)]))
-        ticket = _LevelTicket(seg, lvl, entries, skip)
+        with span_if(tr, "pipe.submit", track="submit", plan=name,
+                     level=lvl, span=sid, blocks=b1 - b0 + 1):
+            for b in range(b0, b1 + 1):
+                key = (seg._cache_ns, b)
+                size, disk = seg.frame_info(b)
+                entry, owner = self.store.cache.begin_fill(
+                    key, size, disk, pin=pin,
+                    charge=(lambda b=b, d=disk:
+                            dev.access_block(seg.base_block + b, d)))
+                entries.append(entry)
+                if owner:
+                    if runs and runs[-1][1][-1][0] == b - 1:
+                        runs[-1][1].append((b, key, entry))
+                    else:
+                        runs.append((b, [(b, key, entry)]))
+        ticket = _LevelTicket(seg, lvl, entries, skip, name=name,
+                              span_id=sid)
+        ticket.io_s = IOStats(
+            seq_blocks=st.seq_blocks - seq0,
+            rand_blocks=st.rand_blocks - rand0).modeled_seconds(
+                block_bytes=dev.block_bytes)
         if runs:
             self._inflight.append(self._io.submit(self._read_job, seg,
                                                   ticket, runs))
         return ticket
 
     def _read_job(self, seg, ticket: _LevelTicket, runs: list) -> None:
-        """io thread: batched extent preads + device charges in
-        submission order, then fan the frames out to the decode pool.
-        ``ticket.io_s`` is set before any decode job is submitted, so a
-        reaper that saw every holder complete also sees it."""
+        """io thread: batched extent preads, then fan the frames out to
+        the decode pool.  Cache and device accounting already happened
+        at submit time — this thread only moves bytes."""
         try:
-            st = seg.device.stats
-            seq0, rand0 = st.seq_blocks, st.rand_blocks
             decode_jobs = []
-            for b_lo, owned in runs:
-                try:
-                    raw = seg.read_frames(b_lo, owned[-1][0])
-                except Exception as exc:
-                    for _b, key, holder in owned:
-                        self.store.cache.discard(key, holder)
-                        holder.fail(exc)
-                    continue
-                for b, key, holder in owned:
-                    seg.device.access_block(seg.base_block + b,
-                                            seg.frame_info(b)[1])
-                    decode_jobs.append((seg, b, key, holder,
-                                        seg.frame_slice(raw, b_lo, b)))
-            ticket.io_s = IOStats(
-                seq_blocks=st.seq_blocks - seq0,
-                rand_blocks=st.rand_blocks - rand0).modeled_seconds(
-                    block_bytes=seg.device.block_bytes)
+            with span_if(self.tracer, "level.read", plan=ticket.name,
+                         level=ticket.lvl, parent=ticket.span_id,
+                         runs=len(runs)):
+                for b_lo, owned in runs:
+                    try:
+                        raw = seg.read_frames(b_lo, owned[-1][0])
+                    except Exception as exc:
+                        for _b, key, holder in owned:
+                            self.store.cache.discard(key, holder)
+                            holder.fail(exc)
+                        continue
+                    for b, key, holder in owned:
+                        decode_jobs.append(
+                            (seg, b, key, holder,
+                             seg.frame_slice(raw, b_lo, b)))
             for job in decode_jobs:
-                self._decode.submit(self._decode_job, *job)
+                self._decode.submit(self._decode_job, *job,
+                                    ticket.span_id)
         except BaseException as exc:
             # Never leave a holder unset: every waiter would deadlock.
             for _b_lo, owned in runs:
@@ -233,17 +265,19 @@ class ReadPipeline:
                         holder.fail(exc)
 
     def _decode_job(self, seg, block: int, key, holder: PendingBlock,
-                    raw: bytes) -> None:
+                    raw: bytes, span_id: int = 0) -> None:
         """decode pool: CRC verify + codec decode, completing the
         placeholder.  A corrupt frame is dropped from the cache and the
         error re-raises in the waiting query thread."""
-        try:
-            data = seg.decode_frame(block, raw)
-        except BaseException as exc:
-            self.store.cache.discard(key, holder)
-            holder.fail(exc)
-        else:
-            holder.set(data)
+        with span_if(self.tracer, "level.decode", block=block,
+                     parent=span_id):
+            try:
+                data = seg.decode_frame(block, raw)
+            except BaseException as exc:
+                self.store.cache.discard(key, holder)
+                holder.fail(exc)
+            else:
+                holder.set(data)
 
     # ----------------------------------------------------------------- reap
     def reap(self, ticket: _LevelTicket):
@@ -251,7 +285,9 @@ class ReadPipeline:
         its fills, parse the slab, and advance the stall simulation."""
         t0 = time.perf_counter()
         compute = t0 - self._last_reap_wall
-        slab, stall_wall = ticket.collect()
+        with span_if(self.tracer, "level.wait", plan=ticket.name,
+                     level=ticket.lvl, span=ticket.span_id):
+            slab, stall_wall = ticket.collect()
         # Discrete-event model of the one-spindle device under the
         # depth-N submit window (module docstring).
         i = len(self._reap_virtual)

@@ -29,12 +29,21 @@ Asserts the ISSUE-3/4/5 acceptance criteria end to end:
   submit-ordered) and exposes the overlap metrics (time-to-first-level
   ticks, stall counters present);
 * kNN mode (ISSUE-7 satellite): store-served ``--mode knn`` answers
-  equal the in-memory engine's k-nearest rows exactly.
+  equal the in-memory engine's k-nearest rows exactly;
+* end-to-end tracing (ISSUE-8, DESIGN.md §11): a *mixed* ssd + p2p
+  workload served under a ``Tracer`` yields answers and cache counter
+  sequences bit-identical to the untraced twin, the exported Chrome
+  trace validates (balanced B/E, monotonic ts per tid) and contains
+  the span taxonomy, read/decode/relax overlap is visible at queue
+  depth 4, and the metrics snapshot carries sane per-mode latency
+  histograms.  Set ``SMOKE_TRACE_OUT=<path>`` to keep the Chrome
+  trace (CI uploads it as an artifact).
 
     PYTHONPATH=src python -m repro.storage.smoke
 """
 from __future__ import annotations
 
+import os
 import tempfile
 
 import numpy as np
@@ -200,6 +209,84 @@ def main() -> None:
             f"p2p read {p2p_bytes} bytes, full sweep {ssd_bytes} — " \
             "meet-in-the-middle is not saving I/O"
 
+        # Traced mixed serve (ISSUE-8, DESIGN.md §11): alternate ssd and
+        # p2p batches through one shared depth-4 engine under a Tracer.
+        # Tracing must be a pure observer — answers and cache counter
+        # totals bit-identical to the untraced twin — and the Chrome
+        # export must validate, carry the span taxonomy, and show the
+        # pipeline's read/decode work overlapping query-thread
+        # relax/wait time.
+        from ..obs import MetricsRegistry, Tracer, validate_chrome_trace
+
+        def mixed_serve(tracer, metrics=None):
+            store = IndexStore(delta_dir,
+                               cache=PageCache(budget25, policy="2q"))
+            engine = StreamingQueryEngine(store, queue_depth=4,
+                                          decode_workers=2)
+            srv = {m: QueryServer(engine, batch_size=8,
+                                  cache_entries=0, mode=m,
+                                  device=store.device, warm_start=True,
+                                  tracer=tracer, metrics=metrics)
+                   for m in ("ssd", "p2p")}
+            answers = []
+            try:
+                for i, lo in enumerate(range(0, N_QUERIES, 8)):
+                    if i % 2 == 0:
+                        rs = srv["ssd"].serve_stream(sources[lo: lo + 8])
+                    else:
+                        rs = srv["p2p"].serve_stream(pairs[lo: lo + 8])
+                    answers += [np.atleast_1d(r.dist) for r in rs]
+            finally:
+                engine.close()
+            cs = store.cache.stats
+            return answers, (cs.hits, cs.misses, cs.bytes_read,
+                             cs.bytes_filled, cs.evictions)
+
+        tracer = Tracer()
+        metrics = MetricsRegistry()
+        traced, ctr_traced = mixed_serve(tracer, metrics)
+        plain, ctr_plain = mixed_serve(None)
+        for a, b in zip(traced, plain):
+            np.testing.assert_array_equal(a, b)
+        assert ctr_traced == ctr_plain, \
+            f"tracing perturbed the cache: {ctr_traced} != {ctr_plain}"
+        for j in range(8):
+            np.testing.assert_array_equal(traced[j], direct[j])
+            np.testing.assert_array_equal(
+                traced[8 + j],
+                np.atleast_1d(np.float32(direct[8 + j][targets[8 + j]])))
+
+        doc = tracer.chrome()
+        problems = validate_chrome_trace(doc)
+        assert not problems, f"invalid Chrome trace: {problems[:3]}"
+        names = {e["name"] for e in doc["traceEvents"]}
+        need = {"query.ssd", "query.p2p", "jit.dispatch", "pipe.submit",
+                "level.wait", "level.relax", "level.read",
+                "level.decode", "cache.hit", "cache.miss",
+                "device.read"}
+        assert need <= names, f"trace missing spans: {need - names}"
+        sp = tracer.spans()
+        pipe_sp = [s for s in sp
+                   if s["name"] in ("level.read", "level.decode")
+                   and s["tname"].startswith("hod-pipe-")]
+        q_sp = [s for s in sp
+                if s["name"] in ("level.relax", "level.wait")]
+        assert pipe_sp and q_sp, "pipeline or query-thread spans missing"
+        assert any(p["t0"] < q["t1"] and q["t0"] < p["t1"]
+                   for p in pipe_sp for q in q_sp), \
+            "no read/decode vs relax/wait overlap at queue depth 4"
+        snap = metrics.snapshot()
+        assert snap["schema_version"] >= 1
+        for m in ("ssd", "p2p"):
+            h = snap["histograms"][f"latency_ms.{m}"]
+            assert h["count"] == 8 and 0.0 < h["p50"] <= h["p99"], \
+                f"latency_ms.{m} histogram not sane: {h}"
+        trace_out = os.environ.get("SMOKE_TRACE_OUT")
+        if trace_out:
+            tracer.write_chrome(trace_out)
+            print(f"wrote {trace_out} "
+                  f"({len(doc['traceEvents'])} events)")
+
         print(f"storage smoke OK: {st.requests} queries from a "
               f"5% cache ({st.page_hit_rate():.1%} hit rate), "
               f"{st.store_bytes_read/1e6:.2f} MB actually read "
@@ -217,7 +304,11 @@ def main() -> None:
               f"knn(k=5): {len(knn_results)} queries bit-identical; "
               f"p2p: {stp.requests} pairs served "
               f"({stp.page_hit_rate():.1%} hit rate), cold sweep "
-              f"{p2p_bytes/1e3:.0f} KB vs {ssd_bytes/1e3:.0f} KB full")
+              f"{p2p_bytes/1e3:.0f} KB vs {ssd_bytes/1e3:.0f} KB full; "
+              f"traced mixed serve bit-identical "
+              f"({len(doc['traceEvents'])} trace events, "
+              f"ssd p99 {snap['histograms']['latency_ms.ssd']['p99']:.1f}"
+              f" ms)")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,7 @@ the device I/O, not just the compute.
 """
 from __future__ import annotations
 
+import os
 from collections import deque
 from typing import Iterator, Optional, Tuple
 
@@ -61,6 +62,7 @@ import numpy as np
 from .. import shardlib as sl
 from ..core.index import node_levels
 from ..core.query import INF, QueryEngine, _knn_select
+from ..obs.trace import span_if
 from .blockfile import IndexStore
 from .pipeline import PipelineStats, ReadPipeline
 
@@ -80,7 +82,8 @@ class StreamingQueryEngine(QueryEngine):
     def __init__(self, store: IndexStore, core_mode: str = "closure",
                  use_pallas: bool = False, eps: float = 0.0,
                  interpret: Optional[bool] = None, prefetch: bool = True,
-                 queue_depth: int = 4, decode_workers: int = 2):
+                 queue_depth: int = 4, decode_workers: int = 2,
+                 tracer=None):
         self.store = store
         self.prefetch = bool(prefetch)
         self._init_engine(store.resident, core_mode, use_pallas, eps,
@@ -127,6 +130,50 @@ class StreamingQueryEngine(QueryEngine):
         self._pipe = (ReadPipeline(store, queue_depth=queue_depth,
                                    decode_workers=decode_workers)
                       if self.prefetch else None)
+        if tracer is not None:
+            self.set_tracer(tracer)
+
+    # --------------------------------------------------------- observability
+    def set_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.trace.Tracer` (DESIGN.md §11) to
+        every layer this engine drives: relax spans (``QueryEngine``
+        hook), pipeline submit/read/decode/wait spans, cache
+        hit/miss/evict instants (``PageCache.on_event``, routed to the
+        synthetic ``submit`` track so the query thread's own span
+        sequence stays depth-invariant), and modeled-device access
+        instants (``BlockDevice.on_access``, ``device`` track).  Pass
+        ``None`` to detach everything."""
+        self.tracer = tracer
+        self._seg_short: dict = {}   # cache-namespace -> short label
+        if self._pipe is not None:
+            self._pipe.tracer = tracer
+        self.store.cache.on_event = (self._on_cache_event
+                                     if tracer is not None else None)
+        self.store.device.on_access = (self._on_device_access
+                                       if tracer is not None else None)
+
+    def _on_cache_event(self, kind: str, key, nbytes: int) -> None:
+        tr = self.tracer
+        if tr is None:
+            return
+        if isinstance(key, tuple) and len(key) == 2:
+            ns, block = key
+            seg = self._seg_short.get(ns)
+            if seg is None:   # memoized: this fires per block touch
+                seg = self._seg_short[ns] = os.path.basename(str(ns))
+            block = int(block)
+        else:
+            seg, block = str(key), -1
+        tr.instant(f"cache.{kind}", track="submit", seg=seg,
+                   block=block, bytes=int(nbytes))
+
+    def _on_device_access(self, block_id: int, nbytes: int,
+                          seq: bool) -> None:
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("device.read", track="device",
+                       block=int(block_id), bytes=int(nbytes),
+                       seq=bool(seq))
 
     def pipeline_stats(self) -> Optional[PipelineStats]:
         """The live :class:`PipelineStats` (overlap/stall metrics), or
@@ -152,7 +199,10 @@ class StreamingQueryEngine(QueryEngine):
         n = self.store.n_real(name)
         if self._pipe is None:
             for lvl in range(n):
-                yield self.store.read_level(name, lvl, pin=pin)
+                with span_if(self.tracer, "level.read", plan=name,
+                             level=lvl):
+                    slab = self.store.read_level(name, lvl, pin=pin)
+                yield slab
                 if unpin_after:
                     self.store.unpin_level(name, lvl)
             return
@@ -181,7 +231,7 @@ class StreamingQueryEngine(QueryEngine):
     def _sweep(self, state: jnp.ndarray, name: str, step,
                pin: bool = False) -> jnp.ndarray:
         return self._run_plan_stream(state, self._levels(name, pin=pin),
-                                     step)
+                                     step, label=name)
 
     def _init_dist(self, sources_perm: np.ndarray) -> jnp.ndarray:
         s = sources_perm.shape[0]
@@ -192,12 +242,14 @@ class StreamingQueryEngine(QueryEngine):
     def _apply_core(self, dist: jnp.ndarray) -> jnp.ndarray:
         if not self.index.n_core:
             return dist
-        if self.core_mode == "dijkstra":
-            # Paper-faithful host heap over the resident core CSR —
-            # the same shared helper the in-memory validation mode
-            # uses (QueryEngine._core_dijkstra_host).
-            return jnp.asarray(self._core_dijkstra_host(np.array(dist)))
-        return self._core_jit(dist)
+        with span_if(self.tracer, "core.search", mode=self.core_mode):
+            if self.core_mode == "dijkstra":
+                # Paper-faithful host heap over the resident core CSR —
+                # the same shared helper the in-memory validation mode
+                # uses (QueryEngine._core_dijkstra_host).
+                return jnp.asarray(
+                    self._core_dijkstra_host(np.array(dist)))
+            return self._core_jit(dist)
 
     def _ssd_stream(self, sources_perm: np.ndarray,
                     pin: bool = False) -> jnp.ndarray:
@@ -233,7 +285,8 @@ class StreamingQueryEngine(QueryEngine):
             for name in ("plan_b", "plan_core", "plan_f"):
                 pred = self._run_plan_stream(
                     pred, self._levels(name, unpin_after=True),
-                    lambda p, *slab: self._recon_step(p, dist, *slab))
+                    lambda p, *slab: self._recon_step(p, dist, *slab),
+                    label=name)
         finally:
             for name in ("plan_f", "plan_b"):
                 self._unpin_plan(name)
@@ -246,8 +299,9 @@ class StreamingQueryEngine(QueryEngine):
         """One level slab, read synchronously (bounded sweeps bypass the
         prefetch thread so a skip / early exit provably skips the I/O,
         not just the compute)."""
-        return tuple(jnp.asarray(a)
-                     for a in self.store.read_level(name, lvl))
+        with span_if(self.tracer, "level.read", plan=name, level=lvl):
+            return tuple(jnp.asarray(a)
+                         for a in self.store.read_level(name, lvl))
 
     def p2p(self, sources: np.ndarray, targets: np.ndarray,
             early_term: bool = True) -> np.ndarray:

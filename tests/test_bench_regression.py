@@ -47,6 +47,12 @@ BASELINE = {
              "stall_model_s": 0.4, "queries_per_s": 380.0},
         ],
         "cold_start": [{"load_s": 0.05}],
+        "latency": [
+            {"mode": "ssd", "p50_ms": 10.0, "p99_ms": 40.0,
+             "queries_per_s": 400.0, "trace_overhead_frac": 0.01},
+            {"mode": "p2p", "p50_ms": 12.0, "p99_ms": 55.0,
+             "queries_per_s": 330.0, "trace_overhead_frac": 0.01},
+        ],
     },
 }
 
@@ -170,6 +176,68 @@ def test_throughput_check_can_be_skipped():
     doctored["tables"]["serve"][0]["queries_per_s"] = 9e9
     assert compare(doctored, BASELINE, check_throughput=False) == []
     assert compare(doctored, BASELINE)          # on by default
+
+
+# ---------------------------------------------- latency p99 gate (ISSUE-8)
+def test_latency_p99_within_tolerance_passes():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["latency"][0]["p99_ms"] = 55.0      # +38% < 50%
+    assert compare(BASELINE, fresh) == []
+
+
+def test_latency_p99_growth_fails():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["latency"][1]["p99_ms"] = 95.0      # +73%
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 1
+    assert "latency[p2p]" in violations[0] and "p99" in violations[0]
+    # a looser CI-style tolerance absorbs the same growth
+    assert compare(BASELINE, fresh, latency_tol=2.0) == []
+
+
+def test_missing_latency_row_fails():
+    """A fresh run that stops measuring a served mode's latency (say
+    the sweep was disabled) must fail the gate, not pass silently."""
+    fresh = copy.deepcopy(BASELINE)
+    del fresh["tables"]["latency"][0]
+    violations = compare(BASELINE, fresh)
+    assert violations == ["latency[ssd]: row missing from fresh run"]
+
+
+# --------------------------------------------- schema drift (ISSUE-8)
+def test_schema_version_mismatch_fails_loudly():
+    from repro.obs.metrics import SCHEMA_VERSION
+    base = copy.deepcopy(BASELINE)
+    base["schema_version"] = SCHEMA_VERSION
+    fresh = copy.deepcopy(BASELINE)
+    fresh["schema_version"] = SCHEMA_VERSION + 1
+    violations = compare(base, fresh)
+    assert len(violations) >= 1
+    assert all("schema drift" in v for v in violations)
+    # matching stamps compare normally
+    fresh["schema_version"] = SCHEMA_VERSION
+    assert compare(base, fresh) == []
+
+
+def test_unstamped_fresh_document_fails_against_stamped_baseline():
+    base = copy.deepcopy(BASELINE)
+    base["schema_version"] = 1
+    violations = compare(base, BASELINE)        # fresh has no stamp
+    assert len(violations) == 1
+    assert "schema drift" in violations[0]
+    assert "regenerate the baseline" in violations[0]
+
+
+def test_missing_field_reports_drift_not_keyerror():
+    """A baseline row predating a field (old schema, no stamp) must
+    produce a readable schema-drift violation, not a KeyError crash."""
+    base = copy.deepcopy(BASELINE)
+    del base["tables"]["latency"][0]["p99_ms"]
+    violations = compare(base, BASELINE)
+    assert len(violations) == 1
+    assert "schema drift" in violations[0]
+    assert "'p99_ms'" in violations[0]
+    assert "regenerate the baseline" in violations[0]
 
 
 @pytest.mark.parametrize("doctor,code", [(False, 0), (True, 1)])
