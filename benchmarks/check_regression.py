@@ -25,7 +25,18 @@ Compared per row, matched on stable keys:
   regardless of what the baseline says;
 * ``latency`` rows (key: ``mode``, ISSUE-8) — per-mode ``p99_ms`` must
   not grow by more than ``--latency-tol`` (default +50%; wall-time,
-  so CI passes a looser value, like the throughput gate).
+  so CI passes a looser value, like the throughput gate);
+* ``slo`` rows (key: ``cls, policy``, ISSUE-9) — the mixed-traffic
+  scheduler table.  The four parent class rows (``ssd``/``p2p`` ×
+  ``fifo``/``slo``) must exist in the fresh run *regardless of the
+  baseline* (a scheduler that silently drops a traffic class cannot
+  pass), their ``p99_ms`` is gated by ``--latency-tol`` and their
+  wall-clock ``queries_per_s`` by ``--throughput-tol``; the
+  ``.cached``/``.cold`` sub-rows are informational (membership
+  depends on arrival timing, so they are not presence-checked).  A
+  second *fresh-run* invariant mirrors the in-bench assert: for every
+  ``cheap`` class, the ``slo`` policy's p99 must be strictly below
+  the ``fifo`` baseline's — the whole point of the scheduler.
 
 **Schema drift fails loudly** (ISSUE-8): documents are stamped with
 ``repro.obs.metrics.SCHEMA_VERSION`` by ``benchmarks/run.py``.  A
@@ -223,6 +234,65 @@ def _compare_tables(base_t: dict, fresh_t: dict, hit_rate_tol: float,
                 out.append(
                     f"{name}: {label} {got[field]} > {ceil:.0f} "
                     f"(baseline {row[field]} + {bytes_tol:.0%})")
+
+    # slo table (ISSUE-9): parent class rows are required in the fresh
+    # run even with no baseline; the cheap-class p99 ordering is a
+    # fresh-run invariant with no tolerance.
+    fresh_slo = {(r["cls"], r["policy"]): r
+                 for r in fresh_t.get("slo", ())}
+    if "slo" in fresh_t or "slo" in base_t:
+        classes = sorted({r["cls"]
+                          for t in (base_t.get("slo", ()),
+                                    fresh_t.get("slo", ()))
+                          for r in t if "." not in r["cls"]})
+        # every class must be reported under BOTH policies — a class
+        # seen only under fifo means the scheduler dropped it (and
+        # vice versa), so the pairing is required, not row-by-row
+        for key in [(c, p) for c in classes for p in ("fifo", "slo")]:
+            if key not in fresh_slo:
+                out.append(f"slo[cls={key[0]}, policy={key[1]}]: class "
+                           "row missing from fresh run — a traffic "
+                           "class stopped being served/reported")
+        cheap = sorted({r["cls"] for r in fresh_t.get("slo", ())
+                        if r.get("cheap") and "." not in r["cls"]})
+        if not cheap and fresh_t.get("slo"):
+            out.append("slo: no cheap-class rows in the fresh run — "
+                       "the mixed workload lost its cheap traffic "
+                       "class")
+        for cls in cheap:
+            slo_row = fresh_slo.get((cls, "slo"))
+            fifo_row = fresh_slo.get((cls, "fifo"))
+            if slo_row is None or fifo_row is None:
+                continue    # missing-row violation already recorded
+            if slo_row["p99_ms"] >= fifo_row["p99_ms"]:
+                out.append(
+                    f"slo[cls={cls}]: scheduler p99 "
+                    f"{slo_row['p99_ms']:.2f} ms not strictly below "
+                    f"the fifo baseline's {fifo_row['p99_ms']:.2f} ms "
+                    "— the SLO scheduler stopped protecting the "
+                    "cheap class")
+    for row in base_t.get("slo", ()):
+        if "." in row["cls"]:
+            continue        # timing-dependent sub-rows: informational
+        key = (row["cls"], row["policy"])
+        name = f"slo[cls={key[0]}, policy={key[1]}]"
+        got = fresh_slo.get(key)
+        if got is None:
+            continue        # already reported above
+        ceil = (1.0 + latency_tol) * row["p99_ms"]
+        if got["p99_ms"] > ceil:
+            out.append(
+                f"{name}: p99 {got['p99_ms']:.2f} ms > {ceil:.2f} "
+                f"(baseline {row['p99_ms']:.2f} ms "
+                f"+ {latency_tol:.0%})")
+        if check_throughput:
+            floor = (1.0 - throughput_tol) * row["queries_per_s"]
+            if got["queries_per_s"] < floor:
+                out.append(
+                    f"{name}: wall throughput "
+                    f"{got['queries_per_s']:.0f} q/s < {floor:.0f} "
+                    f"(baseline {row['queries_per_s']:.0f} "
+                    f"- {throughput_tol:.0%})")
 
     fresh_lat = {r["mode"]: r for r in fresh_t.get("latency", ())}
     for row in base_t.get("latency", ()):

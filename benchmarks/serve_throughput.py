@@ -33,15 +33,17 @@ compiles O(1) traces regardless of level count.
 """
 from __future__ import annotations
 
+import asyncio
 import os
 import tempfile
 import time
 
 import numpy as np
 
+from repro.config import Config
 from repro.core import QueryEngine
 from repro.core.index import HoDIndex
-from repro.launch.serve import QueryServer
+from repro.launch.serve import QueryServer, mixed_request_stream
 from repro.storage import segment_bytes
 
 from .common import build_hod_cached, dataset_suite, fmt_row
@@ -81,6 +83,48 @@ LATENCY_MODES = ("ssd", "p2p")
 TRACE_OVERHEAD_FRAC = 0.05
 TRACE_OVERHEAD_SLACK_S = 0.002
 OVERHEAD_REPEATS = 3
+#: ISSUE-9 slo table: both policies must serve the same offered load
+#: at matching wall-clock throughput (the p99 win can't come from
+#: shedding work).
+SLO_QPS_TOL = 0.25
+
+#: The declarative grid (DESIGN.md §12): ``run()`` loads
+#: ``configs/bench_serve.yaml`` when present, layered over these
+#: defaults — which mirror the historical module constants so rows
+#: stay comparable when the file is absent.
+BENCH_CONFIG = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            os.pardir, "configs", "bench_serve.yaml")
+BENCH_DEFAULTS = {
+    "bench": {
+        "batch_sizes": list(BATCH_SIZES),
+        "n_requests": N_REQUESTS,
+        "store": {
+            "requests": STORE_REQUESTS,
+            "cache_grid": [list(fp) for fp in STORE_CONFIGS],
+            "codecs": list(STORE_CODECS),
+            "codec_fracs": list(CODEC_FRACS),
+        },
+        "queue_depth": {"depths": list(QUEUE_DEPTHS),
+                        "codecs": list(QD_CODECS)},
+        "latency": {"modes": list(LATENCY_MODES)},
+        "slo": {
+            "requests": 256, "rate": 250.0, "batch": 16,
+            "max_wait_ms": 60.0, "p2p_pool": 16,
+            "mix": {"ssd": 1, "p2p": 3},
+            "classes": {"ssd": {"deadline_ms": 200.0},
+                        "p2p": {"deadline_ms": 60.0, "batch": 8}},
+        },
+    },
+}
+
+
+def load_bench_config(path: str | None = None) -> Config:
+    """``configs/bench_serve.yaml`` (with its ``_include`` chain)
+    layered over :data:`BENCH_DEFAULTS`; a missing file is fine, a
+    present-but-broken one is a loud ``ConfigError``."""
+    path = path if path is not None else (
+        BENCH_CONFIG if os.path.exists(BENCH_CONFIG) else None)
+    return Config(path, defaults=BENCH_DEFAULTS)
 
 
 def cold_start_latency(ix) -> dict:
@@ -114,7 +158,9 @@ def _serve_store(store_dir: str, budget: int, policy: str,
     return server
 
 
-def store_cache_sweep(ix, sources: np.ndarray) -> list:
+def store_cache_sweep(ix, sources: np.ndarray, *,
+                      cache_grid=STORE_CONFIGS, codecs=STORE_CODECS,
+                      codec_fracs=CODEC_FRACS) -> list:
     """Serve the same request stream from a block store under the
     (page-cache budget, eviction policy) grid of ``STORE_CONFIGS``,
     then under the codec × budget grid of ``STORE_CODECS``.
@@ -163,11 +209,11 @@ def store_cache_sweep(ix, sources: np.ndarray) -> list:
             return rows[-1]
 
         raw_rows = {}
-        for frac, policy in STORE_CONFIGS:
+        for frac, policy in cache_grid:
             row = one_row("raw", store_dir, frac, policy)
             if policy == "2q":
                 raw_rows[frac] = row
-        for codec in STORE_CODECS:
+        for codec in codecs:
             cdir = os.path.join(tmp, f"store_{codec}")
             ix.save_store(cdir, codec=codec)
             cseg = segment_bytes(cdir)
@@ -175,7 +221,7 @@ def store_cache_sweep(ix, sources: np.ndarray) -> list:
                 assert cseg <= (1 - DELTA_MIN_SHRINK) * seg_bytes, (
                     f"delta segments {cseg} shrank segment bytes by "
                     f"less than {DELTA_MIN_SHRINK:.0%} vs raw {seg_bytes}")
-            for frac in CODEC_FRACS:
+            for frac in codec_fracs:
                 row = one_row(codec, cdir, frac, "2q")
                 raw_read = raw_rows[frac]["real_bytes"]
                 # fully-resident budgets read nothing after warmup on
@@ -188,7 +234,8 @@ def store_cache_sweep(ix, sources: np.ndarray) -> list:
     return rows
 
 
-def queue_depth_sweep(ix, sources: np.ndarray) -> list:
+def queue_depth_sweep(ix, sources: np.ndarray, *,
+                      depths=QUEUE_DEPTHS, codecs=QD_CODECS) -> list:
     """ISSUE-7: serve a cold 25% 2q store at every (codec, queue depth)
     cell and meter the read pipeline's overlap.
 
@@ -217,7 +264,7 @@ def queue_depth_sweep(ix, sources: np.ndarray) -> list:
     rows = []
     with tempfile.TemporaryDirectory() as tmp:
         dirs = {}
-        for codec in QD_CODECS:
+        for codec in codecs:
             d = os.path.join(tmp, f"store_{codec}")
             ix.save_store(d, codec=codec)
             dirs[codec] = d
@@ -230,8 +277,8 @@ def queue_depth_sweep(ix, sources: np.ndarray) -> list:
                        "stall ms", "wall-stall ms", "ttfl ms",
                        "q/s (model)", "q/s (wall)"]))
         base = {}
-        for codec in QD_CODECS:
-            for depth in QUEUE_DEPTHS:
+        for codec in codecs:
+            for depth in depths:
                 server = QueryServer(
                     store_path=dirs[codec], cache_bytes=budget,
                     batch_size=STORE_BATCH, cache_entries=0,
@@ -450,7 +497,8 @@ def workload_mix_sweep(ix, sources: np.ndarray) -> list:
     return rows
 
 
-def latency_sweep(ix, sources: np.ndarray) -> list:
+def latency_sweep(ix, sources: np.ndarray, *,
+                  modes=LATENCY_MODES) -> list:
     """ISSUE-8: per-mode latency percentiles + the tracing-overhead
     contract, from one 25% 2q raw store at queue depth 4.
 
@@ -481,7 +529,7 @@ def latency_sweep(ix, sources: np.ndarray) -> list:
               f"depth 4 --")
         print(fmt_row(["mode", "p50 ms", "p95 ms", "p99 ms",
                        "queries/s", "trace overhead"]))
-        for mode in LATENCY_MODES:
+        for mode in modes:
             reqs = pairs if mode == "p2p" else sources
             tracer = Tracer()
 
@@ -564,12 +612,127 @@ def latency_sweep(ix, sources: np.ndarray) -> list:
     return rows
 
 
-def run(dataset: str = "USRN-like") -> dict:
+def slo_sweep(engine, ix, slo_cfg: Config) -> list:
+    """ISSUE-9: the mixed-traffic scheduler table — one server, two
+    admission policies, one offered load.
+
+    A seeded mixed ssd+p2p stream (shares, pool, rate, and SLO classes
+    all from the ``bench.slo`` config section) is replayed twice with
+    *identical* Poisson arrival gaps: once under ``scheduler="fifo"``
+    (single shared queue, one ``max_wait_ms`` — the coalescing
+    baseline) and once under ``scheduler="slo"`` (per-class queues,
+    deadline-aware flushing).  Both servers carry the same SLO classes
+    so deadline misses are counted against identical budgets.
+
+    In-bench acceptance (also re-checked baseline-free by
+    ``check_regression.py``):
+
+    * every answered request is bit-identical to the unscheduled path
+      (singleton engine calls) under BOTH policies;
+    * the cheap class's (p2p) p99 under ``slo`` is strictly below the
+      fifo baseline's;
+    * wall-clock throughput matches across policies within
+      ``SLO_QPS_TOL`` — the p99 win must come from scheduling, not
+      from answering less traffic."""
+    n = int(slo_cfg.get("requests", 256))
+    rate = float(slo_cfg.get("rate", 250.0))
+    batch = int(slo_cfg.get("batch", 16))
+    max_wait = float(slo_cfg.get("max_wait_ms", 60.0))
+    pool = int(slo_cfg.get("p2p_pool", 16))
+    mix = slo_cfg.get("mix", {"ssd": 1, "p2p": 3})
+    classes = slo_cfg.get("classes", {})
+    modes = tuple(sorted(mix))
+
+    rng = np.random.default_rng(7)
+    stream_cfg = Config(None, defaults={"serve": {"mix": mix}})
+    stream = mixed_request_stream(stream_cfg, ix.n, n, rng,
+                                  p2p_pool=pool)
+    gaps = rng.exponential(1.0 / rate, n).tolist()
+
+    # The unscheduled path: one singleton engine call per distinct
+    # request — what every scheduled answer must be bit-identical to.
+    oracle = {}
+    for mode, args in stream:
+        if (mode, args) in oracle:
+            continue
+        if mode == "p2p":
+            s = np.asarray([args[0]], dtype=np.int32)
+            t = np.asarray([args[1]], dtype=np.int32)
+            oracle[(mode, args)] = np.float32(engine.p2p(s, t)[0])
+        else:
+            s = np.asarray([args[0]], dtype=np.int32)
+            oracle[(mode, args)] = engine.ssd(s)[0]
+
+    print(f"\n-- mixed-traffic SLO scheduler: {n} requests at "
+          f"{rate:.0f}/s, mix {mix}, batch={batch}, fifo "
+          f"max_wait={max_wait:g} ms --")
+    print(fmt_row(["policy", "class", "requests", "p50 ms", "p99 ms",
+                   "misses", "wall q/s"]))
+    rows, p99 = [], {}
+    for policy in ("fifo", "slo"):
+        server = QueryServer(engine, batch_size=batch,
+                             max_wait_ms=max_wait,
+                             cache_entries=4096, mode=modes[0],
+                             modes=modes, scheduler=policy,
+                             slo=classes)
+        server.warmup()
+
+        async def drive():
+            tasks = []
+            for (mode, args), gap in zip(stream, gaps):
+                tasks.append(asyncio.create_task(
+                    server.submit(*args, mode=mode)))
+                await asyncio.sleep(gap)
+            await server.drain()
+            return await asyncio.gather(*tasks)
+
+        t0 = time.perf_counter()
+        results = asyncio.run(drive())
+        wall = time.perf_counter() - t0
+        qps = n / wall
+
+        for (mode, args), r in zip(stream, results):
+            want = oracle[(mode, args)]
+            assert np.array_equal(np.asarray(r.dist),
+                                  np.asarray(want)), (
+                f"{policy}: {mode}{args} diverged from the "
+                f"unscheduled path")
+        for row in server.slo_report():
+            row = dict(row, policy=policy,
+                       queries_per_s=qps,
+                       miss_rate=(row["deadline_misses"]
+                                  / max(row["requests"], 1)),
+                       cheap=row["mode"] == "p2p")
+            rows.append(row)
+            p99[(row["cls"], policy)] = row["p99_ms"]
+            print(fmt_row([
+                policy, row["cls"], row["requests"],
+                f"{row['p50_ms']:.2f}", f"{row['p99_ms']:.2f}",
+                row["deadline_misses"], f"{qps:.0f}"]))
+        p99[("__qps__", policy)] = qps
+
+    qf, qs = p99[("__qps__", "fifo")], p99[("__qps__", "slo")]
+    assert abs(qs - qf) / qf <= SLO_QPS_TOL, (
+        f"slo wall throughput {qs:.0f} q/s strayed more than "
+        f"{SLO_QPS_TOL:.0%} from fifo's {qf:.0f}")
+    assert p99[("p2p", "slo")] < p99[("p2p", "fifo")], (
+        f"cheap-class p99 under slo ({p99[('p2p', 'slo')]:.2f} ms) "
+        f"not strictly below the fifo baseline "
+        f"({p99[('p2p', 'fifo')]:.2f} ms)")
+    return rows
+
+
+def run(dataset: str = "USRN-like", config_path: str | None = None
+        ) -> dict:
+    cfg = load_bench_config(config_path)
+    if cfg.path:
+        print(f"bench grid: {cfg.path}")
     g = dataset_suite()[dataset]
     art = build_hod_cached(dataset, g)
     rng = np.random.default_rng(0)
     # distinct sources: measure the sweeps, not the LRU cache
-    sources = rng.choice(g.n, size=min(N_REQUESTS, g.n),
+    n_requests = int(cfg.get("bench.n_requests"))
+    sources = rng.choice(g.n, size=min(n_requests, g.n),
                          replace=False).astype(np.int32)
 
     print(f"\n== Serving throughput ({dataset}: n={g.n} m={g.m}, "
@@ -577,7 +740,7 @@ def run(dataset: str = "USRN-like") -> dict:
     print(fmt_row(["batch", "queries/s", "ms/query", "io ms/query",
                    "io ms/batch", "seq blocks"]))
     serve_rows = []
-    for b in BATCH_SIZES:
+    for b in cfg.get("bench.batch_sizes"):
         server = QueryServer(art.engine, batch_size=b, cache_entries=0)
         server.warmup()
         results = server.serve_stream(sources)
@@ -597,14 +760,23 @@ def run(dataset: str = "USRN-like") -> dict:
             "seq_blocks": io.seq_blocks,
         })
 
+    nstore = int(cfg.get("bench.store.requests"))
+    store_srcs = sources[: min(nstore, sources.shape[0])]
     store_rows = store_cache_sweep(
-        art.index, sources[: min(STORE_REQUESTS, sources.shape[0])])
-    workload_rows = workload_mix_sweep(
-        art.index, sources[: min(STORE_REQUESTS, sources.shape[0])])
+        art.index, store_srcs,
+        cache_grid=[tuple(fp) for fp in
+                    cfg.get("bench.store.cache_grid")],
+        codecs=tuple(cfg.get("bench.store.codecs")),
+        codec_fracs=tuple(cfg.get("bench.store.codec_fracs")))
+    workload_rows = workload_mix_sweep(art.index, store_srcs)
     qd_rows = queue_depth_sweep(
-        art.index, sources[: min(STORE_REQUESTS, sources.shape[0])])
+        art.index, store_srcs,
+        depths=tuple(cfg.get("bench.queue_depth.depths")),
+        codecs=tuple(cfg.get("bench.queue_depth.codecs")))
     latency_rows = latency_sweep(
-        art.index, sources[: min(STORE_REQUESTS, sources.shape[0])])
+        art.index, store_srcs,
+        modes=tuple(cfg.get("bench.latency.modes")))
+    slo_rows = slo_sweep(art.engine, art.index, cfg.sub("bench.slo"))
 
     cold = cold_start_latency(art.index)
     print(f"cold start (batch={COLD_BATCH}): index load "
@@ -613,7 +785,8 @@ def run(dataset: str = "USRN-like") -> dict:
           f"{cold['first_s']*1e3:.0f} ms")
     return {"serve": serve_rows, "store": store_rows,
             "workloads": workload_rows, "queue_depth": qd_rows,
-            "latency": latency_rows, "cold_start": [cold]}
+            "latency": latency_rows, "slo": slo_rows,
+            "cold_start": [cold]}
 
 
 if __name__ == "__main__":

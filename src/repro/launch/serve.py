@@ -1,6 +1,7 @@
-"""Batched HoD query serving (DESIGN.md §8): async request coalescing,
-fixed jit batch shapes, an LRU source-row cache, and disk cost — modeled
-for in-memory engines, *measured* for store-backed ones.
+"""Batched HoD query serving (DESIGN.md §8, §12): async request
+coalescing, fixed jit batch shapes, an LRU source-row cache, a
+mixed-traffic SLO scheduler, and disk cost — modeled for in-memory
+engines, *measured* for store-backed ones.
 
 The paper's flagship workload (closeness centrality, Table 5) issues
 hundreds of SSD queries; the ROADMAP north-star is the same shape at
@@ -12,6 +13,20 @@ LRU cache of recent source rows, and accounts each batch's index scan
 through the block-I/O model (DESIGN.md §9) — one scan of F_f + core +
 F_b *per batch*, which is exactly the amortization HoD's sweep
 structure buys (every source in the batch shares the scan).
+
+Mixed traffic (DESIGN.md §12): one server can admit several query
+modes at once (``modes=("ssd", "p2p")``) and schedule them under
+per-class latency targets.  ``scheduler="fifo"`` is the single-queue
+baseline — every class shares one arrival-ordered queue, one size
+trigger, and one ``max_wait_ms`` timer, so a cheap point lookup queues
+behind whatever cold sweep arrived first.  ``scheduler="slo"`` gives
+each class its own admission queue and flushes a batch *when the
+oldest pending request's class deadline would otherwise be missed*
+(deadline minus an EWMA of the class's recent batch execution time),
+not only on size or a global timer.  Per-class p50/p99 and
+deadline-miss counters land in the PR-8 ``obs`` registry
+(``latency_ms.<mode>[.cached|.cold]``, ``slo.miss.<mode>``) and in
+``ServerStats.report`` / the ``slo`` table of ``BENCH_serve.json``.
 
 Two index residency modes (DESIGN.md §6):
 
@@ -28,6 +43,12 @@ Two index residency modes (DESIGN.md §6):
   then read *compressed* bytes and decompress on cache fill, so
   ``store_bytes_read`` < ``store_bytes_filled``.
 
+The CLI surface is a thin override layer over the declarative config
+spine (``repro.config``, DESIGN.md §12): ``--config
+configs/serve_mixed.yaml`` loads a hierarchical include-based file and
+any explicitly-typed flag wins over it (precedence: built-in defaults
+< include chain < file < CLI).
+
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 32
     PYTHONPATH=src python -m repro.launch.serve --store --cache-frac 0.05
     PYTHONPATH=src python -m repro.launch.serve --store --codec delta
@@ -38,6 +59,8 @@ Two index residency modes (DESIGN.md §6):
     PYTHONPATH=src python -m repro.launch.serve --store --mode knn --k 8
     PYTHONPATH=src python -m repro.launch.serve --store --queue-depth 8 \
         --decode-workers 4
+    PYTHONPATH=src python -m repro.launch.serve \
+        --config configs/serve_mixed.yaml
 """
 from __future__ import annotations
 
@@ -51,6 +74,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..config import (SERVE_DEFAULTS, Config, ConfigError,
+                      overrides_from_args, validate_serve)
 from ..core import (BuildConfig, QueryEngine, grid_road_graph, pack_index,
                     power_law_digraph)
 from ..core.build_fast import build_hod_fast
@@ -58,7 +83,8 @@ from ..core.io_sim import BlockDevice, IOStats
 from ..obs.metrics import Histogram, MetricsRegistry
 from ..obs.trace import span_if
 
-__all__ = ["QueryResult", "ServerStats", "BatchIO", "QueryServer"]
+__all__ = ["QueryResult", "ServerStats", "BatchIO", "ClassSLO",
+           "QueryServer", "server_from_config", "mixed_request_stream"]
 
 
 @dataclasses.dataclass
@@ -71,6 +97,7 @@ class QueryResult:
     pred: Optional[np.ndarray] = None   # [n] predecessors (SSSP mode only)
     nodes: Optional[np.ndarray] = None  # knn mode: [k] nearest node ids
     target: Optional[int] = None        # p2p mode: the other endpoint
+    mode: str = ""                      # query mode that answered this
     latency_s: float = 0.0              # submit -> answer (includes waiting)
     batched_with: int = 1               # real requests sharing the batch
     cached: bool = False                # answered from the LRU cache
@@ -84,6 +111,7 @@ class ServerStats:
     cache_hits: int = 0                 # result-row LRU hits
     padded_slots: int = 0               # jit-shape filler rows executed
     busy_seconds: float = 0.0           # time inside the engine
+    deadline_misses: int = 0            # SLO-classed answers past deadline
     page_hits: int = 0                  # store page-cache block hits
     page_misses: int = 0                # store page-cache block misses
     store_bytes_read: int = 0           # actual bytes read from segments
@@ -103,12 +131,15 @@ class ServerStats:
         return self.page_hits / total if total else 0.0
 
     def report(self, label: str = "", batch_size: Optional[int] = None,
-               latency: Optional[Histogram] = None) -> str:
+               latency: Optional[Histogram] = None,
+               slo_rows: Optional[List[dict]] = None) -> str:
         """Human-readable serving summary (the CLI footer), shared with
         ``benchmarks/serve_throughput.py``.  ``latency`` is the served
         mode's ``latency_ms.*`` histogram from the server's
         :class:`~repro.obs.metrics.MetricsRegistry` — percentiles come
-        from its fixed buckets, no per-request list needed."""
+        from its fixed buckets, no per-request list needed.
+        ``slo_rows`` (``QueryServer.slo_report()``) appends one line
+        per traffic class with its deadline accounting."""
         extras = []
         if batch_size is not None:
             extras.append(f"batch={batch_size}")
@@ -122,6 +153,14 @@ class ServerStats:
             lines.append(f"latency: mean {s['mean']:.2f} ms  "
                          f"p50 {s['p50']:.2f}  p95 {s['p95']:.2f}  "
                          f"p99 {s['p99']:.2f} ms")
+        for row in slo_rows or ():
+            dl = (f"deadline {row['deadline_ms']:g} ms, "
+                  f"{row['deadline_misses']}/{row['requests']} missed"
+                  if row.get("deadline_ms") else "no deadline")
+            lines.append(
+                f"class {row['cls']:<12} p50 {row['p50_ms']:.2f}  "
+                f"p99 {row['p99_ms']:.2f} ms  "
+                f"({row['requests']} answered, {dl})")
         lines.append(f"throughput: {self.throughput():.0f} queries/s "
                      "(engine-busy basis)")
         return "\n".join(lines)
@@ -140,6 +179,36 @@ class BatchIO:
     page_misses: int = 0
     filled_bytes: int = 0               # decompressed bytes cached
     stall_s: float = 0.0                # modeled pipeline stall this batch
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSLO:
+    """Latency target of one traffic class (DESIGN.md §12).
+
+    ``deadline_ms`` is the submit→answer budget; the scheduler flushes
+    the class's queue early enough that the oldest rider can still be
+    executed inside it (deadline minus the class's recent batch-time
+    EWMA).  ``batch`` caps how many requests one flush admits (the jit
+    shape stays the server's ``batch_size`` — a smaller class batch is
+    an admission cap, padded up like any partial batch)."""
+
+    deadline_ms: float
+    batch: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.deadline_ms > 0:
+            raise ValueError(f"deadline_ms must be > 0, "
+                             f"got {self.deadline_ms!r}")
+        if self.batch is not None and self.batch < 1:
+            raise ValueError(f"class batch must be >= 1, "
+                             f"got {self.batch!r}")
+
+
+#: One queued request: (request key, future, submit time, mode).
+_Pending = Tuple[object, "asyncio.Future", float, str]
+
+#: Shared single-arrival queue key under ``scheduler="fifo"``.
+_FIFO = "_fifo"
 
 
 class QueryServer:
@@ -166,6 +235,15 @@ class QueryServer:
       carry ``[k]`` node ids + distances; store-backed engines run the
       shrinking-radius bounded sweep).
 
+    ``modes=("ssd", "p2p", ...)`` admits several query types into one
+    server (mixed traffic); ``mode`` then names the *primary* class
+    (what :meth:`serve_stream` and a mode-less :meth:`submit` use).
+    ``scheduler`` picks the admission policy — ``"fifo"`` (one shared
+    arrival queue; the single-queue coalescing baseline) or ``"slo"``
+    (per-class queues with deadline-aware flushing, configured by
+    ``slo={mode: ClassSLO(...)}``; classes without an SLO fall back to
+    ``max_wait_ms``).  See DESIGN.md §12 for the state machine.
+
     Store-backed servers stream through the depth-N read pipeline:
     ``queue_depth``/``decode_workers`` size it (``None`` keeps the
     engine defaults), ``pin_frac`` sizes the page cache's pin budget,
@@ -174,11 +252,23 @@ class QueryServer:
     """
 
     MODES = ("ssd", "sssp", "p2p", "within", "knn")
+    SCHEDULERS = ("fifo", "slo")
+    #: EWMA factor for per-class batch-execution estimates.
+    EXEC_EWMA_ALPHA = 0.3
+    #: Deadline headroom: flush at ``deadline - HEADROOM * exec_est``.
+    #: The factor above 1 absorbs EWMA estimation error and event-loop
+    #: contention (another class's batch may hold the loop when this
+    #: queue comes due) — without it every deadline-flushed batch
+    #: lands exactly on its deadline and jitter turns into misses.
+    SLO_HEADROOM = 2.0
 
     def __init__(self, engine: Optional[QueryEngine] = None,
                  batch_size: int = 32,
                  max_wait_ms: float = 2.0, cache_entries: int = 1024,
                  sssp: bool = False, mode: Optional[str] = None,
+                 modes: Optional[Tuple[str, ...]] = None,
+                 scheduler: str = "fifo",
+                 slo: Optional[Dict[str, object]] = None,
                  within_d: float = float("inf"), knn_k: int = 10,
                  device: Optional[BlockDevice] = None,
                  warm_start: bool = False,
@@ -191,14 +281,62 @@ class QueryServer:
                  engine_opts: Optional[dict] = None,
                  tracer=None,
                  metrics: Optional[MetricsRegistry] = None):
+        # Fail at construction with a named parameter, not deep inside
+        # PageCache / asyncio (ISSUE-9 satellite).
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if not max_wait_ms >= 0:
+            raise ValueError(f"max_wait_ms must be >= 0, "
+                             f"got {max_wait_ms!r}")
+        if cache_entries < 0:
+            raise ValueError(f"cache_entries must be >= 0, "
+                             f"got {cache_entries!r}")
+        if not within_d > 0:
+            raise ValueError(f"within_d must be > 0, got {within_d!r}")
+        if knn_k < 1:
+            raise ValueError(f"knn_k must be >= 1, got {knn_k!r}")
+        if queue_depth is not None and queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, "
+                             f"got {queue_depth!r}")
+        if decode_workers is not None and decode_workers < 1:
+            raise ValueError(f"decode_workers must be >= 1, "
+                             f"got {decode_workers!r}")
+        if pin_frac is not None and not 0.0 <= pin_frac <= 1.0:
+            raise ValueError(f"pin_frac must be in [0, 1], "
+                             f"got {pin_frac!r}")
+        if scheduler not in self.SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r} "
+                             f"(one of {self.SCHEDULERS})")
         if mode is None:
-            mode = "sssp" if sssp else "ssd"
+            mode = ("sssp" if sssp
+                    else (modes[0] if modes else "ssd"))
         elif sssp and mode != "sssp":
             raise ValueError(f"sssp=True contradicts mode={mode!r}")
-        if mode not in self.MODES:
-            raise ValueError(f"unknown mode {mode!r} (one of {self.MODES})")
+        if modes is None:
+            modes = (mode,)
+        elif mode not in modes:
+            raise ValueError(f"primary mode {mode!r} missing from "
+                             f"modes={modes!r}")
+        for m in modes:
+            if m not in self.MODES:
+                raise ValueError(f"unknown mode {m!r} "
+                                 f"(one of {self.MODES})")
+        if len(set(modes)) != len(modes):
+            raise ValueError(f"duplicate modes in {modes!r}")
+        self._slo: Dict[str, ClassSLO] = {}
+        for cls_name, spec in (slo or {}).items():
+            if cls_name not in modes:
+                raise ValueError(f"SLO class {cls_name!r} is not an "
+                                 f"admitted mode {modes!r}")
+            if isinstance(spec, ClassSLO):
+                self._slo[cls_name] = spec
+            elif isinstance(spec, dict):
+                self._slo[cls_name] = ClassSLO(
+                    deadline_ms=float(spec["deadline_ms"]),
+                    batch=spec.get("batch"))
+            else:
+                raise ValueError(f"slo[{cls_name!r}] must be a ClassSLO "
+                                 f"or mapping, got {spec!r}")
         if engine is None:
             if store_path is None:
                 raise ValueError("pass an engine or a store_path")
@@ -247,6 +385,8 @@ class QueryServer:
         self.max_wait_ms = float(max_wait_ms)
         self.cache_entries = int(cache_entries)
         self.mode = mode
+        self.modes = tuple(modes)
+        self.scheduler = scheduler
         self.sssp = mode == "sssp"
         self.within_d = float(within_d)
         self.knn_k = int(knn_k)
@@ -254,11 +394,19 @@ class QueryServer:
         self.stats = ServerStats()
         self.batch_io: List[BatchIO] = []
         # Cache / pending keys are ints (one source) or (source, target)
-        # tuples (p2p), namespaced by mode.
+        # tuples (p2p), namespaced by mode *and* the mode's parameters
+        # (ISSUE-9 staleness fix — see _cache_key).
         self._cache: "collections.OrderedDict[tuple, tuple]" = \
             collections.OrderedDict()
-        self._pending: List[Tuple[object, asyncio.Future, float]] = []
+        # Admission queues (DESIGN.md §12): one shared arrival queue
+        # under "fifo", one queue per class under "slo".
+        self._queues: Dict[str, List[_Pending]] = {}
         self._timer: Optional[asyncio.Task] = None
+        #: Absolute flush-by time the armed timer targets (perf_counter
+        #: seconds) — exposed for the fake-clock regression tests.
+        self._timer_deadline: Optional[float] = None
+        #: Per-class EWMA of batch execution seconds (deadline headroom).
+        self._exec_ewma: Dict[str, float] = {}
         self._last_batch_bytes = 0.0    # real (store) or modeled (in-mem)
 
         # One query's disk cost = one sequential scan of the index "files"
@@ -269,48 +417,72 @@ class QueryServer:
         # both — charge whichever this engine's core_mode actually scans.
         # Store-backed servers keep this as the *model* to compare real
         # reads against; only in-memory engines charge it to the device.
-        if self.store is not None:
-            self._sweep_bytes = self.store.scan_bytes(
-                sssp=self.sssp, core_mode=engine.core_mode)
-        else:
-            from ..core.index import core_scan_bytes
-            ix = engine.index
-            self._sweep_bytes = (
-                ix.plan_f.scan_bytes(include_assoc=self.sssp)
-                + ix.plan_b.scan_bytes(include_assoc=self.sssp)
-                + (ix.plan_core.scan_bytes(True) if self.sssp else 0)
-                + core_scan_bytes(ix, engine.core_mode))
+        self._mode_sweep_bytes: Dict[str, int] = {}
+        for m in self.modes:
+            m_sssp = m == "sssp"
+            if self.store is not None:
+                self._mode_sweep_bytes[m] = self.store.scan_bytes(
+                    sssp=m_sssp, core_mode=engine.core_mode)
+            else:
+                from ..core.index import core_scan_bytes
+                ix = engine.index
+                self._mode_sweep_bytes[m] = (
+                    ix.plan_f.scan_bytes(include_assoc=m_sssp)
+                    + ix.plan_b.scan_bytes(include_assoc=m_sssp)
+                    + (ix.plan_core.scan_bytes(True) if m_sssp else 0)
+                    + core_scan_bytes(ix, engine.core_mode))
+        self._sweep_bytes = self._mode_sweep_bytes[self.mode]
         if warm_start:
             # Compile the batch shape at construction (server startup),
             # off the first request's latency path.
             self.warmup()
 
     # ------------------------------------------------------------- internals
+    def _now(self) -> float:
+        """Monotonic clock — a seam the fake-clock tests patch."""
+        return time.perf_counter()
+
     def _keys(self, requests: np.ndarray) -> List:
         """Hashable request identities: ints, or (source, target) pairs."""
         if requests.ndim == 2:
             return [(int(s), int(t)) for s, t in requests]
         return [int(s) for s in requests]
 
-    def _cache_get(self, req):
-        key = (self.mode, req)
+    def _cache_key(self, req, mode: Optional[str] = None) -> tuple:
+        """LRU namespace: mode *plus the parameters that shape its
+        answer*.  ``within`` rows depend on the threshold and ``knn``
+        rows on k, so reconfiguring a live server (or serving two
+        parameterizations) must never replay rows computed under the
+        old parameter (ISSUE-9 cache-staleness fix)."""
+        mode = mode or self.mode
+        if mode == "within":
+            return (mode, self.within_d, req)
+        if mode == "knn":
+            return (mode, self.knn_k, req)
+        return (mode, None, req)
+
+    def _cache_get(self, req, mode: Optional[str] = None):
+        key = self._cache_key(req, mode)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
         return hit
 
-    def _cache_put(self, req, row: tuple) -> None:
+    def _cache_put(self, req, row: tuple,
+                   mode: Optional[str] = None) -> None:
         if self.cache_entries <= 0:
             return
-        key = (self.mode, req)
+        key = self._cache_key(req, mode)
         self._cache[key] = row
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_entries:
             self._cache.popitem(last=False)
 
-    def _execute(self, requests: np.ndarray) -> List[tuple]:
+    def _execute(self, requests: np.ndarray,
+                 mode: Optional[str] = None) -> List[tuple]:
         """Run one padded batch; returns one (dist, pred) row per request
         (``requests`` is ``[B]`` sources, or ``[B, 2]`` pairs in p2p)."""
+        mode = mode or self.mode
         fill = requests.shape[0]
         batch = requests
         if fill < self.batch_size:     # pad to the compiled shape
@@ -323,18 +495,18 @@ class QueryServer:
                   if hasattr(self.engine, "pipeline_stats") else None)
         pbefore = pstats.snapshot() if pstats is not None else None
         t0 = time.perf_counter()
-        with span_if(self.tracer, f"query.{self.mode}",
+        with span_if(self.tracer, f"query.{mode}",
                      batch=self.stats.batches + 1, fill=fill), \
-             span_if(self.tracer, "jit.dispatch", mode=self.mode):
-            if self.mode == "sssp":
+             span_if(self.tracer, "jit.dispatch", mode=mode):
+            if mode == "sssp":
                 dist, pred = self.engine.sssp(batch)
-            elif self.mode == "p2p":
+            elif mode == "p2p":
                 dist, pred = (self.engine.p2p(batch[:, 0], batch[:, 1]),
                               None)
-            elif self.mode == "within":
+            elif mode == "within":
                 dist, pred = (self.engine.ssd_within(batch,
                                                      self.within_d), None)
-            elif self.mode == "knn":
+            elif mode == "knn":
                 # rows carry (distances, node ids); _row_fields unpacks
                 nodes, dist = self.engine.knn(batch, self.knn_k)
                 pred = nodes
@@ -342,6 +514,12 @@ class QueryServer:
                 dist, pred = self.engine.ssd(batch), None
         busy = time.perf_counter() - t0
         self.stats.busy_seconds += busy
+        # Per-class execution estimate (deadline headroom, DESIGN.md
+        # §12): EWMA so one slow cold batch doesn't lock in forever.
+        prev = self._exec_ewma.get(mode)
+        a = self.EXEC_EWMA_ALPHA
+        self._exec_ewma[mode] = (busy if prev is None
+                                 else (1 - a) * prev + a * busy)
         pdelta = (pstats - pbefore) if pstats is not None else None
         if pdelta is not None:
             self.stats.stall_seconds += pdelta.stall_model_s
@@ -352,6 +530,7 @@ class QueryServer:
         self.stats.padded_slots += self.batch_size - fill
         m = self.metrics
         m.counter("server.batches").inc()
+        m.counter(f"server.batches.{mode}").inc()
         m.counter("server.padded_slots").inc(self.batch_size - fill)
         m.counter("server.busy_seconds").inc(busy)
         if pdelta is not None:
@@ -359,8 +538,8 @@ class QueryServer:
         if self.store is None:
             # In-memory engine: no real reads happen, charge the modeled
             # sequential scan so I/O reporting stays meaningful.
-            self.device.sequential(self._sweep_bytes)
-            self._last_batch_bytes = float(self._sweep_bytes)
+            self.device.sequential(self._mode_sweep_bytes[mode])
+            self._last_batch_bytes = float(self._mode_sweep_bytes[mode])
         else:
             # Store-backed: the page cache already metered every actual
             # block read (miss) through the device — record the delta.
@@ -371,7 +550,8 @@ class QueryServer:
             self.stats.store_bytes_filled += delta.bytes_filled
             self.batch_io.append(BatchIO(
                 batch=self.stats.batches, real_bytes=delta.bytes_read,
-                modeled_bytes=self._sweep_bytes, page_hits=delta.hits,
+                modeled_bytes=self._mode_sweep_bytes[mode],
+                page_hits=delta.hits,
                 page_misses=delta.misses,
                 filled_bytes=delta.bytes_filled,
                 stall_s=pdelta.stall_model_s if pdelta else 0.0))
@@ -384,39 +564,61 @@ class QueryServer:
                 self.stats.page_hit_rate())
         rows = []
         for i, req in enumerate(self._keys(requests)):
-            if self.mode == "p2p":     # scalar answer per pair
+            if mode == "p2p":          # scalar answer per pair
                 row = (np.float32(dist[i]), None)
             else:
                 row = (dist[i].copy(),
                        None if pred is None else pred[i].copy())
-            self._cache_put(req, row)
+            self._cache_put(req, row, mode)
             rows.append(row)
         return rows
 
-    def _observe(self, latency_s: float, cached: bool) -> None:
-        """Per-request metrics: request counters + the per-mode (and
-        per-class: ``.cached``) latency histograms the p99 bench gate
-        reads back (DESIGN.md §11)."""
+    def _observe(self, latency_s: float, cached: bool,
+                 mode: Optional[str] = None) -> None:
+        """Per-request metrics: request counters, the per-mode and
+        per-class (``.cached`` / ``.cold``) latency histograms the p99
+        bench gate reads back (DESIGN.md §11), and — when the class
+        has an SLO — deadline-miss accounting (§12)."""
+        mode = mode or self.mode
         m = self.metrics
         m.counter("server.requests").inc()
         ms = latency_s * 1e3
-        m.histogram(f"latency_ms.{self.mode}").observe(ms)
+        m.histogram(f"latency_ms.{mode}").observe(ms)
         if cached:
             m.counter("server.result_cache_hits").inc()
-            m.histogram(f"latency_ms.{self.mode}.cached").observe(ms)
+            m.histogram(f"latency_ms.{mode}.cached").observe(ms)
+        else:
+            m.histogram(f"latency_ms.{mode}.cold").observe(ms)
+        cls = self._slo.get(mode)
+        if cls is not None:
+            m.counter(f"slo.requests.{mode}").inc()
+            if ms > cls.deadline_ms:
+                m.counter(f"slo.miss.{mode}").inc()
+                self.stats.deadline_misses += 1
 
-    def _row_fields(self, row: tuple) -> tuple:
+    def _row_fields(self, row: tuple, mode: Optional[str] = None) -> tuple:
         """Split a cached row into ``(dist, pred, nodes)`` — knn rows
         carry node ids in the second slot, SSSP rows predecessors."""
-        if self.mode == "knn":
+        if (mode or self.mode) == "knn":
             return row[0], None, row[1]
         return row[0], row[1], None
 
     # ------------------------------------------------------------- sync path
     def warmup(self) -> None:
-        """Trigger the one-and-only jit compile outside the latency path."""
-        shape = (1, 2) if self.mode == "p2p" else (1,)
-        self._execute(np.zeros(shape, dtype=np.int32))
+        """Trigger the one-and-only jit compile outside the latency path
+        — once per admitted mode — and seed the per-class execution
+        estimates the deadline scheduler subtracts from its budgets."""
+        for m in self.modes:
+            shape = (1, 2) if m == "p2p" else (1,)
+            self._execute(np.zeros(shape, dtype=np.int32), mode=m)
+        # Seed the per-class execution estimates from a second,
+        # post-compile pass: the compile-time figures are orders of
+        # magnitude above steady state and would make the deadline
+        # scheduler flush every early batch immediately.
+        self._exec_ewma.clear()
+        for m in self.modes:
+            shape = (1, 2) if m == "p2p" else (1,)
+            self._execute(np.zeros(shape, dtype=np.int32), mode=m)
         self.stats = ServerStats()
         self.batch_io.clear()
         self._cache.clear()   # the warmup row must not count as a hit
@@ -442,7 +644,8 @@ class QueryServer:
             # Compile-time spans must not pollute the served trace.
             self.tracer.clear()
 
-    def serve_stream(self, requests: np.ndarray) -> List[QueryResult]:
+    def serve_stream(self, requests: np.ndarray,
+                     mode: Optional[str] = None) -> List[QueryResult]:
         """Closed-loop driver: answer a request list in arrival order.
 
         ``requests`` is ``[N]`` sources — or ``[N, 2]`` (source, target)
@@ -451,8 +654,12 @@ class QueryServer:
         answer, same semantics as the async path) — divide by
         ``batched_with`` for the amortized per-query cost.
         """
+        mode = mode or self.mode
+        if mode not in self.modes:
+            raise ValueError(f"mode {mode!r} not admitted "
+                             f"(modes={self.modes!r})")
         requests = np.asarray(requests, dtype=np.int32)
-        if (requests.ndim == 2) != (self.mode == "p2p"):
+        if (requests.ndim == 2) != (mode == "p2p"):
             raise ValueError("p2p mode takes [N, 2] (source, target) "
                              "rows; other modes take [N] sources")
         out: List[QueryResult] = []
@@ -460,26 +667,26 @@ class QueryServer:
             chunk = requests[lo: lo + self.batch_size]
             t0 = time.perf_counter()
             misses = sorted({k for k in self._keys(chunk)
-                             if self._cache_get(k) is None})
+                             if self._cache_get(k, mode) is None})
             miss_rows: Dict[object, tuple] = {}
             if misses:
                 uniq = np.asarray(misses, dtype=np.int32)
-                for k, row in zip(misses, self._execute(uniq)):
+                for k, row in zip(misses, self._execute(uniq, mode)):
                     miss_rows[k] = row
             lat = time.perf_counter() - t0
             share = self._last_batch_bytes / len(misses) if misses else 0.0
             charged = set()   # charge each missed request's share once
             for k in self._keys(chunk):
                 cached = k not in miss_rows
-                row = miss_rows.get(k) or self._cache_get(k)
+                row = miss_rows.get(k) or self._cache_get(k, mode)
                 self.stats.requests += 1
                 self.stats.cache_hits += cached
-                self._observe(lat, cached)
+                self._observe(lat, cached, mode)
                 src, tgt = k if isinstance(k, tuple) else (k, None)
-                d, p, nd = self._row_fields(row)
+                d, p, nd = self._row_fields(row, mode)
                 out.append(QueryResult(
                     source=src, target=tgt, dist=d, pred=p, nodes=nd,
-                    latency_s=lat, batched_with=chunk.shape[0],
+                    mode=mode, latency_s=lat, batched_with=chunk.shape[0],
                     cached=cached,
                     io_bytes=0.0 if (cached or k in charged) else share))
                 charged.add(k)
@@ -487,90 +694,223 @@ class QueryServer:
 
     # ------------------------------------------------------------ async path
     async def submit(self, source: int,
-                     target: Optional[int] = None) -> QueryResult:
+                     target: Optional[int] = None,
+                     mode: Optional[str] = None) -> QueryResult:
         """Enqueue one request; resolves when its batch executes (or on a
-        cache hit, immediately).  p2p mode requires ``target``."""
-        if (target is not None) != (self.mode == "p2p"):
+        cache hit, immediately).  p2p mode requires ``target``;
+        ``mode`` (default: the server's primary) must be admitted."""
+        mode = mode or self.mode
+        if mode not in self.modes:
+            raise ValueError(f"mode {mode!r} not admitted "
+                             f"(modes={self.modes!r})")
+        if (target is not None) != (mode == "p2p"):
             raise ValueError("target is required in p2p mode and "
                              "meaningless otherwise")
         req = ((int(source), int(target)) if target is not None
                else int(source))
-        t0 = time.perf_counter()
-        hit = self._cache_get(req)
+        t0 = self._now()
+        hit = self._cache_get(req, mode)
         if hit is not None:
             self.stats.requests += 1
             self.stats.cache_hits += 1
-            lat = time.perf_counter() - t0
-            self._observe(lat, cached=True)
-            d, p, nd = self._row_fields(hit)
+            lat = self._now() - t0
+            self._observe(lat, cached=True, mode=mode)
+            d, p, nd = self._row_fields(hit, mode)
             return QueryResult(source=int(source), target=target,
-                               dist=d, pred=p, nodes=nd,
+                               dist=d, pred=p, nodes=nd, mode=mode,
                                latency_s=lat, cached=True)
         fut = asyncio.get_running_loop().create_future()
-        self._pending.append((req, fut, t0))
-        if len(self._pending) >= self.batch_size:
-            self._flush(include_partial=False)
-        elif self._timer is None:
-            self._timer = asyncio.create_task(self._flush_later())
+        qkey = _FIFO if self.scheduler == "fifo" else mode
+        self._queues.setdefault(qkey, []).append((req, fut, t0, mode))
+        if len(self._queues[qkey]) >= self._take_size(qkey):
+            self._flush_queue(qkey, partial=False)
+        # Deterministic re-arm (ISSUE-9 double-wait fix): the timer is
+        # ALWAYS re-derived from the oldest pending deadlines after any
+        # queue mutation — a straggler left over by a full-size flush
+        # keeps its own submit-time budget instead of waiting for the
+        # next arrival (or a fresh full max_wait) to re-arm it.
+        self._arm_timer()
         return await fut
 
-    async def _flush_later(self) -> None:
-        await asyncio.sleep(self.max_wait_ms / 1e3)
-        self._timer = None
-        self._flush()
+    # --------------------------------------------------- scheduler internals
+    def _take_size(self, qkey: str) -> int:
+        """Size trigger / flush width of one queue (per-class caps)."""
+        cls = self._slo.get(qkey)
+        if cls is not None and cls.batch is not None:
+            return min(cls.batch, self.batch_size)
+        return self.batch_size
 
-    def _flush(self, include_partial: bool = True) -> None:
+    def _flush_by(self, entry: _Pending) -> float:
+        """Absolute time this entry's queue must flush by (DESIGN.md
+        §12 deadline accounting): its class deadline minus
+        ``SLO_HEADROOM`` times the class's batch-execution EWMA
+        (clamped at the submit time, so an already-hopeless deadline
+        still flushes immediately rather than never).  Classes without
+        an SLO use ``max_wait_ms``."""
+        _, _, t0, mode = entry
+        cls = self._slo.get(mode) if self.scheduler == "slo" else None
+        if cls is None:
+            return t0 + self.max_wait_ms / 1e3
+        est = self._exec_ewma.get(mode, 0.0)
+        return max(t0, t0 + cls.deadline_ms / 1e3
+                   - self.SLO_HEADROOM * est)
+
+    def _earliest_flush_by(self) -> Optional[float]:
+        cands = [self._flush_by(q[0])
+                 for q in self._queues.values() if q]
+        return min(cands) if cands else None
+
+    def _arm_timer(self) -> None:
+        """(Re)arm the single flush timer at the earliest flush-by time
+        over every queue; disarm when nothing is pending.  Called after
+        every queue mutation, so the timer deadline is always a pure
+        function of the pending set — no path leaves a straggler
+        waiting on the *next* submit to start its clock."""
+        earliest = self._earliest_flush_by()
+        if earliest is None:
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
+            self._timer_deadline = None
+            return
+        if (self._timer is not None
+                and self._timer_deadline is not None
+                and abs(self._timer_deadline - earliest) < 1e-9):
+            return   # already armed for exactly this deadline
         if self._timer is not None:
             self._timer.cancel()
-            self._timer = None
-        while self._pending and (include_partial
-                                 or len(self._pending) >= self.batch_size):
-            take, self._pending = (self._pending[: self.batch_size],
-                                   self._pending[self.batch_size:])
-            reqs = np.asarray([r for r, _, _ in take], dtype=np.int32)
-            # Coalesce wait: the oldest rider's queue time, as a
-            # retroactive X span (its duration is only known now).
-            wait_s = time.perf_counter() - min(t0 for _, _, t0 in take)
-            self.metrics.histogram("coalesce_wait_ms").observe(
-                wait_s * 1e3)
-            if self.tracer is not None:
-                self.tracer.complete(
-                    "coalesce.wait",
-                    self.tracer.now() - int(wait_s * 1e9),
-                    waiters=len(take))
+        self._timer_deadline = earliest
+        delay = max(0.0, earliest - self._now())
+        self._timer = asyncio.create_task(self._flush_later(delay))
+
+    async def _flush_later(self, delay: float) -> None:
+        await asyncio.sleep(delay)
+        self._timer = None
+        self._timer_deadline = None
+        self._flush_due()
+
+    def _flush_due(self) -> None:
+        """Timer body: flush every queue whose oldest rider is due (or
+        that reached its size trigger), most-urgent class first, then
+        re-arm for whatever is left."""
+        while True:
+            now = self._now()
+            due = [(self._flush_by(q[0]), qkey)
+                   for qkey, q in self._queues.items()
+                   if q and (len(q) >= self._take_size(qkey)
+                             or self._flush_by(q[0]) <= now)]
+            if not due:
+                break
+            due.sort()
+            for _, qkey in due:
+                self._flush_queue(qkey, partial=True, only_due=True)
+        self._arm_timer()
+
+    def _flush_queue(self, qkey: str, partial: bool = True,
+                     only_due: bool = False) -> None:
+        """Flush one admission queue: full takes always, a trailing
+        partial take when ``partial`` (and, under ``only_due``, only
+        while its oldest rider is actually due)."""
+        q = self._queues.get(qkey)
+        while q:
+            width = self._take_size(qkey)
+            if len(q) < width:
+                if not partial:
+                    break
+                if only_due and self._flush_by(q[0]) > self._now():
+                    break
+            take, self._queues[qkey] = q[:width], q[width:]
+            q = self._queues[qkey]
+            self._run_batch(take)
+
+    def _run_batch(self, take: List[_Pending]) -> None:
+        """Execute one flushed take: split it into per-mode sub-batches
+        in arrival order (a fifo take can mix classes), resolve the
+        futures, and do the latency/deadline accounting."""
+        # Coalesce wait: the oldest rider's queue time, as a
+        # retroactive X span (its duration is only known now).
+        wait_s = self._now() - min(t0 for _, _, t0, _ in take)
+        self.metrics.histogram("coalesce_wait_ms").observe(wait_s * 1e3)
+        if self.tracer is not None:
+            self.tracer.complete(
+                "coalesce.wait",
+                self.tracer.now() - int(wait_s * 1e9),
+                waiters=len(take))
+        groups: "collections.OrderedDict[str, List[_Pending]]" = \
+            collections.OrderedDict()
+        for entry in take:
+            groups.setdefault(entry[3], []).append(entry)
+        for mode, entries in groups.items():
+            reqs = np.asarray([r for r, _, _, _ in entries],
+                              dtype=np.int32)
             try:
-                rows = self._execute(reqs)
+                rows = self._execute(reqs, mode)
             except Exception as exc:
                 # Never strand co-riders: a poisoned batch (e.g. an
                 # out-of-range source) fails every request in it.
-                for _, fut, _ in take:
+                for _, fut, _, _ in entries:
                     if not fut.done():
                         fut.set_exception(exc)
                 continue
-            share = self._last_batch_bytes / len(take)
-            now = time.perf_counter()
-            for (req, fut, t0), row in zip(take, rows):
+            share = self._last_batch_bytes / len(entries)
+            now = self._now()
+            for (req, fut, t0, _), row in zip(entries, rows):
                 self.stats.requests += 1
-                self._observe(now - t0, cached=False)
+                self._observe(now - t0, cached=False, mode=mode)
                 src, tgt = req if isinstance(req, tuple) else (req, None)
                 if not fut.done():
-                    d, p, nd = self._row_fields(row)
+                    d, p, nd = self._row_fields(row, mode)
                     fut.set_result(QueryResult(
-                        source=src, target=tgt, dist=d, pred=p, nodes=nd,
-                        latency_s=now - t0, batched_with=len(take),
-                        io_bytes=share))
-        if self._pending and self._timer is None:
-            self._timer = asyncio.create_task(self._flush_later())
+                        source=src, target=tgt, dist=d, pred=p,
+                        nodes=nd, mode=mode, latency_s=now - t0,
+                        batched_with=len(entries), io_bytes=share))
+
+    def _flush(self, include_partial: bool = True) -> None:
+        """Flush every queue unconditionally (drain / legacy callers),
+        then re-derive the timer from whatever remains."""
+        for qkey in list(self._queues):
+            self._flush_queue(qkey, partial=include_partial)
+        self._arm_timer()
 
     async def drain(self) -> None:
         """Flush every queued request (shutdown / end of trace)."""
         self._flush()
 
+    def pending_count(self) -> int:
+        """Queued-but-unflushed requests (scheduler introspection)."""
+        return sum(len(q) for q in self._queues.values())
+
     # ------------------------------------------------------------- reporting
+    def slo_report(self) -> List[dict]:
+        """Per-class latency/deadline rows (the ``slo`` bench table's
+        currency): one row per admitted mode plus its ``.cached`` /
+        ``.cold`` sub-classes that saw traffic."""
+        rows: List[dict] = []
+        for mode in self.modes:
+            cls = self._slo.get(mode)
+            for sub in ("", ".cached", ".cold"):
+                hist = self.metrics.histograms(
+                    f"latency_ms.{mode}{sub}").get(
+                        f"latency_ms.{mode}{sub}")
+                if hist is None or not hist.count:
+                    continue
+                s = hist.summary()
+                row = {"cls": f"{mode}{sub}", "mode": mode,
+                       "requests": s["count"], "mean_ms": s["mean"],
+                       "p50_ms": s["p50"], "p99_ms": s["p99"],
+                       "deadline_ms": (cls.deadline_ms if cls else None),
+                       "deadline_misses": 0}
+                if cls is not None and sub == "":
+                    row["deadline_misses"] = int(self.metrics.counter(
+                        f"slo.miss.{mode}").value)
+                rows.append(row)
+        return rows
+
     @property
     def modeled_scan_bytes(self) -> int:
         """Compact-payload cost of one full index scan (the model a
-        store-backed server's real reads are compared against)."""
+        store-backed server's real reads are compared against) — the
+        primary mode's; per-mode figures sit in _mode_sweep_bytes."""
         return self._sweep_bytes
 
     def modeled_io(self) -> IOStats:
@@ -579,106 +919,301 @@ class QueryServer:
         return self.device.stats
 
     def close(self) -> None:
-        """Release store file handles / prefetch thread (store-backed)."""
+        """Release store file handles / prefetch thread (store-backed),
+        cancel the flush timer, and fail any still-pending futures so
+        no submitter hangs on a closed server."""
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+            self._timer_deadline = None
+        for q in self._queues.values():
+            for _, fut, _, _ in q:
+                if not fut.done():
+                    fut.set_exception(
+                        RuntimeError("QueryServer closed with the "
+                                     "request still pending"))
+            q.clear()
         if self.store is not None:
             self.engine.close()
 
 
+# ----------------------------------------------------------- config plumbing
+def server_from_config(cfg: Config, *, engine=None,
+                       store_path: Optional[str] = None,
+                       cache_bytes: Optional[int] = None,
+                       device=None, tracer=None,
+                       metrics=None) -> QueryServer:
+    """Build a :class:`QueryServer` from a validated serve config
+    (DESIGN.md §12).  The caller supplies the engine *or* store path
+    (graph/index/store construction stays outside the config spine);
+    everything else — batch, scheduler, SLO classes, cache sizing,
+    pipeline depth — comes from ``cfg``."""
+    validate_serve(cfg)
+    mode = cfg.get("serve.mode", "ssd")
+    mode = {"threshold": "within"}.get(mode, mode)
+    mix = cfg.get("serve.mix") or {}
+    modes = tuple(mix) if mix else (mode,)
+    if mode not in modes:
+        mode = modes[0]
+    for m in modes:
+        if m not in QueryServer.MODES:
+            raise ConfigError(f"config key 'serve.mix' names unknown "
+                              f"mode {m!r} (one of {QueryServer.MODES})")
+    slo = {m: ClassSLO(deadline_ms=float(spec["deadline_ms"]),
+                       batch=spec.get("batch"))
+           for m, spec in (cfg.get("serve.slo") or {}).items()
+           if m in modes}
+    kw = dict(batch_size=cfg.get("serve.batch", 32),
+              max_wait_ms=cfg.get("serve.max_wait_ms", 2.0),
+              cache_entries=cfg.get("serve.cache_entries", 1024),
+              mode=mode, modes=modes,
+              scheduler=cfg.get("serve.scheduler", "fifo"),
+              slo=slo,
+              within_d=cfg.get("serve.threshold", float("inf")),
+              knn_k=cfg.get("serve.k", 10),
+              device=device, tracer=tracer, metrics=metrics)
+    if engine is not None:
+        return QueryServer(engine, **kw)
+    return QueryServer(
+        store_path=store_path, cache_bytes=cache_bytes,
+        cache_policy=cfg.get("store.cache_policy", "2q"),
+        pin_frac=cfg.get("store.pin_frac"),
+        queue_depth=cfg.get("store.queue_depth"),
+        decode_workers=cfg.get("store.decode_workers"),
+        engine_opts={"use_pallas": cfg.get("serve.use_pallas", False),
+                     "prefetch": cfg.get("store.prefetch", True)},
+        **kw)
+
+
+def mixed_request_stream(cfg: Config, n_nodes: int, n_requests: int,
+                         rng: np.random.Generator,
+                         p2p_pool: int = 16) -> List[Tuple[str, tuple]]:
+    """Deterministic mixed-traffic stream from ``serve.mix`` shares:
+    a list of ``(mode, args)`` submissions.  p2p pairs draw from a
+    small pool so the cheap *cached* class actually exists (the
+    millions-of-lookups traffic hub-label systems serve)."""
+    mix = cfg.get("serve.mix") or {cfg.get("serve.mode", "ssd"): 1.0}
+    names = sorted(mix)
+    shares = np.asarray([float(mix[m]) for m in names], dtype=np.float64)
+    shares /= shares.sum()
+    pool = rng.integers(0, n_nodes, size=(max(2, p2p_pool), 2))
+    pool = pool[pool[:, 0] != pool[:, 1]] if n_nodes > 1 else pool
+    picks = rng.choice(len(names), size=n_requests, p=shares)
+    stream: List[Tuple[str, tuple]] = []
+    for i in range(n_requests):
+        m = names[picks[i]]
+        if m == "p2p":
+            s, t = pool[int(rng.integers(0, len(pool)))]
+            stream.append((m, (int(s), int(t))))
+        else:
+            stream.append((m, (int(rng.integers(0, n_nodes)),)))
+    return stream
+
+
 # --------------------------------------------------------------------- CLI
-async def _open_loop(server: QueryServer, requests: np.ndarray,
-                     rate: float, seed: int = 0) -> List[QueryResult]:
-    """Poisson arrivals at `rate` req/s; returns per-request results."""
+async def _open_loop(server: QueryServer, requests, rate: float,
+                     seed: int = 0) -> List[QueryResult]:
+    """Poisson arrivals at `rate` req/s; returns per-request results.
+    ``requests`` is an array of sources / (s, t) rows, or a
+    ``mixed_request_stream`` list of ``(mode, args)`` tuples."""
     rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate, requests.shape[0])
+    n = len(requests)
+    gaps = rng.exponential(1.0 / rate, n)
     tasks = []
-    for r, gap in zip(requests.tolist(), gaps.tolist()):
-        coro = (server.submit(*r) if isinstance(r, list)
-                else server.submit(r))
+    for r, gap in zip(list(requests), gaps.tolist()):
+        if isinstance(r, tuple) and len(r) == 2 and isinstance(r[0], str):
+            mode, args = r
+            coro = server.submit(*args, mode=mode)
+        elif isinstance(r, (list, np.ndarray)):
+            coro = server.submit(*(int(x) for x in r))
+        else:
+            coro = server.submit(int(r))
         tasks.append(asyncio.create_task(coro))
         await asyncio.sleep(gap)
     await server.drain()
     return list(await asyncio.gather(*tasks))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--graph", default="road", choices=["road", "web"])
-    ap.add_argument("--side", type=int, default=60)
-    ap.add_argument("--requests", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--mode", default="ssd",
+def _frac_type(lo: float, hi: float, lo_open: bool = False):
+    """argparse type: a float fraction range-checked at parse time
+    (ISSUE-9 satellite — a bad --cache-frac dies here with a clear
+    message, not inside PageCache)."""
+    def parse(text: str) -> float:
+        try:
+            v = float(text)
+        except ValueError:
+            raise argparse.ArgumentTypeError(f"{text!r} is not a number")
+        if (v <= lo if lo_open else v < lo) or v > hi:
+            bound = f"({lo}, {hi}]" if lo_open else f"[{lo}, {hi}]"
+            raise argparse.ArgumentTypeError(
+                f"{v:g} is out of range {bound}")
+        return v
+    return parse
+
+
+def _nonneg_float(text: str) -> float:
+    try:
+        v = float(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"{text!r} is not a number")
+    if v < 0:
+        raise argparse.ArgumentTypeError(f"{v:g} must be >= 0")
+    return v
+
+
+def _pos_int(text: str) -> int:
+    try:
+        v = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"{text!r} is not an integer")
+    if v < 1:
+        raise argparse.ArgumentTypeError(f"{v} must be >= 1")
+    return v
+
+
+#: CLI flag -> dotted config key (the override layer, DESIGN.md §12).
+_CLI_SPEC = (
+    ("graph", "graph.kind"), ("side", "graph.side"),
+    ("requests", "serve.requests"), ("batch", "serve.batch"),
+    ("mode", "serve.mode"), ("threshold", "serve.threshold"),
+    ("k", "serve.k"), ("cache", "serve.cache_entries"),
+    ("rate", "serve.rate"), ("max_wait_ms", "serve.max_wait_ms"),
+    ("use_pallas", "serve.use_pallas"),
+    ("scheduler", "serve.scheduler"),
+    ("store", "store.enabled"), ("cache_frac", "store.cache_frac"),
+    ("cache_policy", "store.cache_policy"), ("codec", "store.codec"),
+    ("queue_depth", "store.queue_depth"),
+    ("decode_workers", "store.decode_workers"),
+    ("pin_frac", "store.pin_frac"),
+    ("trace_out", "obs.trace_out"), ("metrics_out", "obs.metrics_out"),
+)
+
+
+def build_arg_parser() -> argparse.ArgumentParser:
+    """The serve CLI: every flag defaults to ``argparse.SUPPRESS`` so
+    only *explicitly typed* flags land in the override layer above the
+    config file (documented defaults live in ``SERVE_DEFAULTS``)."""
+    S = argparse.SUPPRESS
+    ap = argparse.ArgumentParser(
+        description="batched HoD query serving (defaults from "
+                    "repro.config.SERVE_DEFAULTS; --config layers a "
+                    "YAML/JSON file under any explicit flag)")
+    ap.add_argument("--config", default=None,
+                    help="hierarchical serve config (YAML/JSON with an "
+                         "_include chain, see configs/serve_mixed.yaml);"
+                         " explicit CLI flags override it")
+    ap.add_argument("--graph", default=S, choices=["road", "web"])
+    ap.add_argument("--side", type=_pos_int, default=S)
+    ap.add_argument("--requests", type=_pos_int, default=S)
+    ap.add_argument("--batch", type=_pos_int, default=S)
+    ap.add_argument("--mode", default=S,
                     choices=["ssd", "p2p", "threshold", "topk", "knn"],
                     help="query mode (DESIGN.md §7): full SSD sweeps, "
                          "point-to-point pairs, distance-threshold "
                          "queries, exact top-k closeness, or k-nearest "
                          "nodes per source")
-    ap.add_argument("--threshold", type=float, default=10.0,
-                    help="distance bound for --mode threshold")
-    ap.add_argument("--k", type=int, default=10,
+    ap.add_argument("--threshold", type=_frac_type(0, float("inf"),
+                                                   lo_open=True),
+                    default=S, help="distance bound for --mode threshold")
+    ap.add_argument("--k", type=_pos_int, default=S,
                     help="result count for --mode topk / knn")
-    ap.add_argument("--sssp", action="store_true")
-    ap.add_argument("--use-pallas", action="store_true")
-    ap.add_argument("--cache", type=int, default=1024)
-    ap.add_argument("--rate", type=float, default=0.0,
+    ap.add_argument("--sssp", action="store_true", default=S)
+    ap.add_argument("--use-pallas", action="store_true", default=S)
+    ap.add_argument("--cache", type=int, default=S,
+                    help="result-row LRU entries (0 disables)")
+    ap.add_argument("--rate", type=_nonneg_float, default=S,
                     help="req/s for open-loop Poisson arrivals (0 = closed)")
-    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--max-wait-ms", type=_nonneg_float, default=S)
+    ap.add_argument("--scheduler", default=S, choices=["fifo", "slo"],
+                    help="admission policy for mixed traffic "
+                         "(DESIGN.md §12): one shared fifo queue, or "
+                         "per-class deadline-aware queues")
     ap.add_argument("--data-parallel", action="store_true",
                     help="shard batches over all local devices (shardlib)")
-    ap.add_argument("--store", action="store_true",
+    ap.add_argument("--store", action="store_true", default=S,
                     help="serve disk-resident: save_store the index and "
                          "stream it through a bounded page cache")
-    ap.add_argument("--cache-frac", type=float, default=0.25,
-                    help="page-cache budget as a fraction of the store's "
-                         "DECOMPRESSED segment bytes (with --store) — "
-                         "codec-independent, since the cache holds "
-                         "decompressed blocks")
-    ap.add_argument("--cache-policy", default="2q",
+    ap.add_argument("--cache-frac", type=_frac_type(0.0, 1.0,
+                                                    lo_open=True),
+                    default=S,
+                    help="page-cache budget as a fraction in (0, 1] of "
+                         "the store's DECOMPRESSED segment bytes (with "
+                         "--store) — codec-independent, since the cache "
+                         "holds decompressed blocks")
+    ap.add_argument("--cache-policy", default=S,
                     choices=["lru", "clock", "arc", "2q"],
                     help="page-cache eviction policy (with --store); "
                          "arc/2q are scan-resistant (DESIGN.md §6)")
-    ap.add_argument("--codec", default="raw",
+    ap.add_argument("--codec", default=S,
                     choices=["raw", "delta", "f16"],
                     help="per-block segment codec (with --store): delta "
                          "compresses id streams losslessly, f16 also "
                          "narrows weights within a documented eps "
                          "(DESIGN.md §6)")
-    ap.add_argument("--queue-depth", type=int, default=4,
+    ap.add_argument("--queue-depth", type=_pos_int, default=S,
                     help="read-pipeline depth (with --store): levels of "
                          "block reads kept in flight ahead of the sweep "
                          "(1 = no read-ahead)")
-    ap.add_argument("--decode-workers", type=int, default=2,
+    ap.add_argument("--decode-workers", type=_pos_int, default=S,
                     help="off-thread decompression pool width (with "
                          "--store)")
-    ap.add_argument("--pin-frac", type=float, default=None,
-                    help="fraction of the page-cache budget reservable "
-                         "by pinned core blocks (with --store; default "
-                         "0.5)")
-    ap.add_argument("--no-prefetch", action="store_true",
+    ap.add_argument("--pin-frac", type=_frac_type(0.0, 1.0), default=S,
+                    help="fraction in [0, 1] of the page-cache budget "
+                         "reservable by pinned core blocks (with "
+                         "--store; default 0.5)")
+    ap.add_argument("--no-prefetch", action="store_true", default=S,
                     help="disable the read pipeline entirely (with "
                          "--store): every block read is synchronous")
-    ap.add_argument("--trace-out", default=None,
+    ap.add_argument("--trace-out", default=S,
                     help="write a per-query trace of the served run: "
                          "Chrome trace-event JSON (open in "
                          "https://ui.perfetto.dev), or a flat JSONL "
                          "event log if the path ends in .jsonl")
-    ap.add_argument("--metrics-out", default=None,
+    ap.add_argument("--metrics-out", default=S,
                     help="write the server's metrics snapshot (counters"
                          ", gauges, latency histograms) as JSON")
+    return ap
+
+
+def load_serve_config(args: argparse.Namespace) -> Config:
+    """Layer ``SERVE_DEFAULTS < --config file (+ its includes) <
+    explicit CLI flags`` and validate at parse time."""
+    overrides = overrides_from_args(args, _CLI_SPEC)
+    if getattr(args, "no_prefetch", False):
+        overrides.setdefault("store", {})["prefetch"] = False
+    cfg = Config(args.config, defaults=SERVE_DEFAULTS,
+                 overrides=overrides)
+    return validate_serve(cfg)
+
+
+def main() -> None:
+    ap = build_arg_parser()
     args = ap.parse_args()
-    if args.sssp and args.mode != "ssd":
+    try:
+        cfg = load_serve_config(args)
+    except ConfigError as exc:
+        ap.error(str(exc))
+    sssp = getattr(args, "sssp", False)
+    cli_mode = cfg.get("serve.mode", "ssd")
+    if sssp and cli_mode != "ssd":
         ap.error("--sssp only combines with the default ssd mode")
     # CLI "threshold" = server mode "within"; "topk" drives the engine
     # directly through core.closeness (it is a batch job, not a stream).
-    server_mode = {"ssd": "sssp" if args.sssp else "ssd",
+    server_mode = {"ssd": "sssp" if sssp else "ssd",
                    "p2p": "p2p", "threshold": "within",
-                   "knn": "knn"}.get(args.mode, "ssd")
+                   "knn": "knn"}.get(cli_mode, "ssd")
+    mix = cfg.get("serve.mix") or {}
+    if cli_mode != "topk" and not mix:
+        cfg.data.setdefault("serve", {})["mix"] = {server_mode: 1.0}
+        mix = cfg.get("serve.mix")
     tracer = None
-    if args.trace_out:
+    if cfg.get("obs.trace_out"):
         from ..obs.trace import Tracer
         tracer = Tracer()
 
-    g = (grid_road_graph(args.side) if args.graph == "road"
-         else power_law_digraph(args.side * args.side, 4, weighted=True))
+    side = int(cfg.get("graph.side", 60))
+    g = (grid_road_graph(side) if cfg.get("graph.kind") == "road"
+         else power_law_digraph(side * side, 4, weighted=True))
     print(f"graph: n={g.n} m={g.m}")
     t0 = time.perf_counter()
     res = build_hod_fast(g, BuildConfig(max_core_nodes=512,
@@ -687,52 +1222,52 @@ def main() -> None:
     print(f"index built in {time.perf_counter()-t0:.1f}s "
           f"({ix.n_levels} levels, core {ix.n_core}, "
           f"{res.stats.shortcuts_added} shortcuts)")
-    if args.store:
+    if cfg.get("store.enabled"):
         import tempfile
         store_dir = tempfile.mkdtemp(prefix="hod_store_")
-        ix.save_store(store_dir, codec=args.codec)
+        ix.save_store(store_dir, codec=cfg.get("store.codec"))
         from ..storage import segment_bytes, segment_logical_bytes
         # budget against the DECOMPRESSED footprint: the cache meters
         # decompressed bytes, so a fraction of the compressed file size
         # would shrink the effective budget by the compression ratio
-        budget = int(args.cache_frac * segment_logical_bytes(store_dir))
-        print(f"store: {store_dir} ({args.codec} codec, "
+        frac = float(cfg.get("store.cache_frac"))
+        budget = int(frac * segment_logical_bytes(store_dir))
+        print(f"store: {store_dir} ({cfg.get('store.codec')} codec, "
               f"{segment_bytes(store_dir)} bytes on disk, page cache "
-              f"{budget} bytes = {args.cache_frac:.0%} of the "
+              f"{budget} bytes = {frac:.0%} of the "
               f"decompressed segments)")
-        server = QueryServer(store_path=store_dir, cache_bytes=budget,
-                             batch_size=args.batch, mode=server_mode,
-                             within_d=args.threshold, knn_k=args.k,
-                             cache_entries=args.cache,
-                             max_wait_ms=args.max_wait_ms,
-                             cache_policy=args.cache_policy,
-                             pin_frac=args.pin_frac,
-                             queue_depth=args.queue_depth,
-                             decode_workers=args.decode_workers,
-                             engine_opts={"use_pallas": args.use_pallas,
-                                          "prefetch": not args.no_prefetch},
-                             tracer=tracer)
+        server = server_from_config(cfg, store_path=store_dir,
+                                    cache_bytes=budget, tracer=tracer)
     else:
-        eng = QueryEngine(ix, use_pallas=args.use_pallas)
-        server = QueryServer(eng, batch_size=args.batch, mode=server_mode,
-                             within_d=args.threshold, knn_k=args.k,
-                             cache_entries=args.cache,
-                             max_wait_ms=args.max_wait_ms,
-                             tracer=tracer)
+        eng = QueryEngine(ix, use_pallas=cfg.get("serve.use_pallas",
+                                                 False))
+        server = server_from_config(cfg, engine=eng, tracer=tracer)
+    if cfg.path:
+        print(f"config: {cfg.path} "
+              f"(+{len(cfg.includes)} include(s)), scheduler "
+              f"{server.scheduler}, classes {', '.join(server.modes)}")
 
     rng = np.random.default_rng(0)
-    shape = ((args.requests, 2) if args.mode == "p2p"
-             else (args.requests,))
-    requests = rng.integers(0, g.n, shape).astype(np.int32)
+    n_requests = int(cfg.get("serve.requests"))
+    if len(server.modes) > 1:
+        requests = mixed_request_stream(cfg, g.n, n_requests, rng)
+    elif server_mode == "p2p":
+        requests = rng.integers(0, g.n, (n_requests, 2)).astype(np.int32)
+    else:
+        requests = rng.integers(0, g.n, (n_requests,)).astype(np.int32)
 
     def drive():
         server.warmup()
-        if args.mode == "topk":
+        if cli_mode == "topk":
             from ..core import topk_closeness
-            return topk_closeness(server.engine, k=args.k,
-                                  batch_size=args.batch)
-        if args.rate > 0:
-            return asyncio.run(_open_loop(server, requests, args.rate))
+            return topk_closeness(server.engine,
+                                  k=int(cfg.get("serve.k")),
+                                  batch_size=int(cfg.get("serve.batch")))
+        rate = float(cfg.get("serve.rate", 0.0))
+        if len(server.modes) > 1 and rate <= 0:
+            rate = 1000.0   # mixed traffic is inherently open-loop
+        if rate > 0:
+            return asyncio.run(_open_loop(server, requests, rate))
         return server.serve_stream(requests)
 
     try:
@@ -749,7 +1284,7 @@ def main() -> None:
 
         st = server.stats
         io = server.modeled_io()
-        if args.mode == "topk":
+        if cli_mode == "topk":
             tk = results
             print(f"top-{tk.k} closeness: {tk.batches} batches, "
                   f"{tk.pruned} candidates pruned mid-sweep, "
@@ -767,12 +1302,15 @@ def main() -> None:
                       f"{cs.bytes_read/1e6:.2f} MB read")
             return
         label = {"ssd": "SSD", "sssp": "SSSP", "p2p": "P2P",
-                 "within": f"within(d={args.threshold:g})",
-                 "knn": f"kNN(k={args.k})"}[server_mode]
+                 "within": f"within(d={cfg.get('serve.threshold'):g})",
+                 "knn": f"kNN(k={cfg.get('serve.k')})"}[server_mode]
+        if len(server.modes) > 1:
+            label = "+".join(server.modes)
         print(st.report(
-            label=label, batch_size=args.batch,
+            label=label, batch_size=int(cfg.get("serve.batch")),
             latency=server.metrics.histogram(
-                f"latency_ms.{server_mode}")))
+                f"latency_ms.{server.mode}"),
+            slo_rows=server.slo_report()))
         kind = "measured" if server.store is not None else "modeled"
         io_s = io.modeled_seconds(block_bytes=server.device.block_bytes)
         print(f"{kind} disk: {io.seq_blocks} seq + {io.rand_blocks} rand "
@@ -790,25 +1328,28 @@ def main() -> None:
                       f"compressed read -> {st.store_bytes_filled/1e6:.2f}"
                       f" MB decompressed on fill "
                       f"({real/max(st.store_bytes_filled,1):.0%} ratio)")
-            if not args.no_prefetch:
-                print(f"read pipeline (depth {args.queue_depth}, "
-                      f"{args.decode_workers} decode workers): modeled "
+            if cfg.get("store.prefetch", True):
+                print(f"read pipeline (depth "
+                      f"{cfg.get('store.queue_depth')}, "
+                      f"{cfg.get('store.decode_workers')} decode "
+                      f"workers): modeled "
                       f"stall {st.stall_seconds*1e3:.1f} ms, measured "
                       f"wait {st.stall_wall_seconds*1e3:.1f} ms, "
                       f"time-to-first-level {st.ttfl_seconds*1e3:.2f} ms")
     finally:
+        trace_out = cfg.get("obs.trace_out")
         if tracer is not None:
-            if args.trace_out.endswith(".jsonl"):
-                tracer.write_jsonl(args.trace_out)
+            if trace_out.endswith(".jsonl"):
+                tracer.write_jsonl(trace_out)
             else:
-                tracer.write_chrome(args.trace_out)
+                tracer.write_chrome(trace_out)
             print(f"trace: {len(tracer.events())} events -> "
-                  f"{args.trace_out}")
-        if args.metrics_out:
-            with open(args.metrics_out, "w") as f:
+                  f"{trace_out}")
+        if cfg.get("obs.metrics_out"):
+            with open(cfg.get("obs.metrics_out"), "w") as f:
                 json.dump(server.metrics.snapshot(), f, indent=2)
                 f.write("\n")
-            print(f"metrics -> {args.metrics_out}")
+            print(f"metrics -> {cfg.get('obs.metrics_out')}")
         # The --store index is a throwaway in /tmp: always release the
         # segment fds / prefetch thread and remove it, even on Ctrl-C.
         if server.store is not None:

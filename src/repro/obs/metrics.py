@@ -34,7 +34,8 @@ __all__ = ["SCHEMA_VERSION", "Counter", "Gauge", "Histogram",
 #: Version of the metrics-snapshot / BENCH row schema.  Bump when a
 #: snapshot or bench table changes shape incompatibly;
 #: ``check_regression.py`` refuses to compare mismatched versions.
-SCHEMA_VERSION = 1
+#: v2: BENCH_serve.json gained the ``slo`` table (ISSUE-9).
+SCHEMA_VERSION = 2
 
 
 def exp_buckets(lo: float = 0.05, hi: float = 60_000.0,

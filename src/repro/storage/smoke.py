@@ -37,12 +37,20 @@ Asserts the ISSUE-3/4/5 acceptance criteria end to end:
   the span taxonomy, read/decode/relax overlap is visible at queue
   depth 4, and the metrics snapshot carries sane per-mode latency
   histograms.  Set ``SMOKE_TRACE_OUT=<path>`` to keep the Chrome
-  trace (CI uploads it as an artifact).
+  trace (CI uploads it as an artifact);
+* the declarative config spine (ISSUE-9, DESIGN.md §12): the
+  checked-in ``configs/serve_mixed.yaml`` (or an inline twin when the
+  file is absent) builds a store-backed mixed ssd+p2p server under
+  the ``slo`` scheduler with two SLO classes via
+  ``server_from_config``; every answer is bit-identical to singleton
+  in-memory engine calls and ``slo_report`` carries both classes'
+  deadline accounting.
 
     PYTHONPATH=src python -m repro.storage.smoke
 """
 from __future__ import annotations
 
+import asyncio
 import os
 import tempfile
 
@@ -287,6 +295,64 @@ def main() -> None:
             print(f"wrote {trace_out} "
                   f"({len(doc['traceEvents'])} events)")
 
+        # Declarative-config end-to-end (ISSUE-9, DESIGN.md §12): the
+        # checked-in mixed config drives a store-backed slo-scheduled
+        # server — mixed ssd+p2p traffic under two SLO classes — and
+        # every answer must stay bit-identical to a singleton call on
+        # the in-memory engine (the unscheduled path).
+        from ..config import SERVE_DEFAULTS, Config
+        from ..launch.serve import mixed_request_stream, server_from_config
+
+        cfg_path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))))),
+            "configs", "serve_mixed.yaml")
+        cfg = Config(cfg_path if os.path.exists(cfg_path) else None,
+                     defaults=SERVE_DEFAULTS,
+                     overrides={"serve": {"requests": 48, "batch": 8}})
+        if not cfg.get("serve.mix"):
+            # installed tree without configs/: the same shape, inline
+            cfg.data["serve"].update(
+                scheduler="slo", mix={"ssd": 1, "p2p": 3},
+                slo={"ssd": {"deadline_ms": 200.0},
+                     "p2p": {"deadline_ms": 60.0, "batch": 8}})
+        mixed_srv = server_from_config(cfg, store_path=store_dir,
+                                       cache_bytes=budget25)
+        assert mixed_srv.scheduler == "slo"
+        assert set(mixed_srv.modes) == {"ssd", "p2p"}
+        assert len(mixed_srv._slo) == 2, "expected two SLO classes"
+        stream = mixed_request_stream(cfg, g.n,
+                                      int(cfg.get("serve.requests")),
+                                      np.random.default_rng(5))
+
+        async def config_drive():
+            tasks = [asyncio.create_task(mixed_srv.submit(*a, mode=m))
+                     for m, a in stream]
+            await asyncio.sleep(0)
+            await mixed_srv.drain()
+            return await asyncio.gather(*tasks)
+
+        try:
+            mixed_srv.warmup()
+            mixed_answers = asyncio.run(config_drive())
+        finally:
+            mixed_srv.close()
+        eng_mem = QueryEngine(ix)
+        for (m, a), r in zip(stream, mixed_answers):
+            if m == "p2p":
+                np.testing.assert_array_equal(
+                    r.dist, np.float32(eng_mem.p2p(
+                        np.array([a[0]], np.int32),
+                        np.array([a[1]], np.int32))[0]))
+            else:
+                np.testing.assert_array_equal(
+                    r.dist, eng_mem.ssd(np.array(a, np.int32))[0])
+        slo_rows = {r["cls"]: r for r in mixed_srv.slo_report()}
+        assert {"ssd", "p2p"} <= set(slo_rows), \
+            f"slo_report lost a traffic class: {sorted(slo_rows)}"
+        assert slo_rows["p2p"]["deadline_ms"] == \
+            cfg.get("serve.slo.p2p.deadline_ms")
+
         print(f"storage smoke OK: {st.requests} queries from a "
               f"5% cache ({st.page_hit_rate():.1%} hit rate), "
               f"{st.store_bytes_read/1e6:.2f} MB actually read "
@@ -308,7 +374,12 @@ def main() -> None:
               f"traced mixed serve bit-identical "
               f"({len(doc['traceEvents'])} trace events, "
               f"ssd p99 {snap['histograms']['latency_ms.ssd']['p99']:.1f}"
-              f" ms)")
+              f" ms); config-driven slo serve: {len(mixed_answers)} "
+              f"mixed requests bit-identical "
+              f"({'file ' + os.path.basename(cfg.path) if cfg.path else 'inline config'}, "
+              f"p2p misses "
+              f"{slo_rows['p2p']['deadline_misses']}"
+              f"/{slo_rows['p2p']['requests']})")
 
 
 if __name__ == "__main__":

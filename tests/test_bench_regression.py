@@ -47,6 +47,28 @@ BASELINE = {
              "stall_model_s": 0.4, "queries_per_s": 380.0},
         ],
         "cold_start": [{"load_s": 0.05}],
+        "slo": [
+            {"cls": "ssd", "policy": "fifo", "requests": 64,
+             "p50_ms": 45.0, "p99_ms": 110.0, "deadline_ms": 200.0,
+             "deadline_misses": 0, "queries_per_s": 155.0,
+             "miss_rate": 0.0, "cheap": False},
+            {"cls": "ssd", "policy": "slo", "requests": 64,
+             "p50_ms": 60.0, "p99_ms": 190.0, "deadline_ms": 200.0,
+             "deadline_misses": 1, "queries_per_s": 145.0,
+             "miss_rate": 0.016, "cheap": False},
+            {"cls": "p2p", "policy": "fifo", "requests": 190,
+             "p50_ms": 40.0, "p99_ms": 97.0, "deadline_ms": 60.0,
+             "deadline_misses": 16, "queries_per_s": 155.0,
+             "miss_rate": 0.084, "cheap": True},
+            {"cls": "p2p", "policy": "slo", "requests": 190,
+             "p50_ms": 1.0, "p99_ms": 35.0, "deadline_ms": 60.0,
+             "deadline_misses": 0, "queries_per_s": 145.0,
+             "miss_rate": 0.0, "cheap": True},
+            {"cls": "p2p.cached", "policy": "slo", "requests": 170,
+             "p50_ms": 0.5, "p99_ms": 30.0, "deadline_ms": 60.0,
+             "deadline_misses": 0, "queries_per_s": 145.0,
+             "miss_rate": 0.0, "cheap": True},
+        ],
         "latency": [
             {"mode": "ssd", "p50_ms": 10.0, "p99_ms": 40.0,
              "queries_per_s": 400.0, "trace_overhead_frac": 0.01},
@@ -202,6 +224,69 @@ def test_missing_latency_row_fails():
     del fresh["tables"]["latency"][0]
     violations = compare(BASELINE, fresh)
     assert violations == ["latency[ssd]: row missing from fresh run"]
+
+
+# ------------------------------------------- slo scheduler gate (ISSUE-9)
+def test_missing_slo_class_row_fails_even_without_baseline_row():
+    """A traffic class silently dropping out of the scheduler table is
+    a loud failure — including when the baseline never had it: parent
+    class rows are required in the fresh run per se."""
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["slo"] = [r for r in fresh["tables"]["slo"]
+                              if not (r["cls"] == "p2p"
+                                      and r["policy"] == "slo")]
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 1
+    assert "slo[cls=p2p, policy=slo]" in violations[0]
+    assert "missing" in violations[0]
+    # same doc on both sides: the fresh-run presence check still fires
+    assert any("missing" in v for v in compare(fresh, fresh))
+
+
+def test_slo_p99_regression_fails():
+    fresh = copy.deepcopy(BASELINE)
+    for row in fresh["tables"]["slo"]:
+        if row["cls"] == "ssd" and row["policy"] == "slo":
+            row["p99_ms"] = 400.0                       # +110% > 50%
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 1
+    assert "slo[cls=ssd, policy=slo]" in violations[0]
+    assert "p99" in violations[0]
+    assert compare(BASELINE, fresh, latency_tol=2.0) == []
+
+
+def test_slo_cheap_class_invariant_is_baseline_free():
+    """The point of the scheduler: cheap-class p99 under ``slo`` must
+    be *strictly* below the fifo baseline's — gated on the fresh run
+    alone, so identical doctored documents still fail."""
+    doc = copy.deepcopy(BASELINE)
+    for row in doc["tables"]["slo"]:
+        if row["cls"] == "p2p" and row["policy"] == "slo":
+            row["p99_ms"] = 97.0                # == fifo: not a win
+    violations = compare(doc, doc)
+    assert len(violations) == 1
+    assert "slo[cls=p2p]" in violations[0]
+    assert "strictly below" in violations[0]
+
+
+def test_slo_cached_subrows_are_informational():
+    """``.cached``/``.cold`` membership depends on arrival timing, so a
+    sub-row vanishing from the fresh run is not a violation."""
+    fresh = copy.deepcopy(BASELINE)
+    fresh["tables"]["slo"] = [r for r in fresh["tables"]["slo"]
+                              if "." not in r["cls"]]
+    assert compare(BASELINE, fresh) == []
+
+
+def test_slo_throughput_parity_gated():
+    fresh = copy.deepcopy(BASELINE)
+    for row in fresh["tables"]["slo"]:
+        if row["policy"] == "slo" and "." not in row["cls"]:
+            row["queries_per_s"] = 100.0                # -31% > 20%
+    violations = compare(BASELINE, fresh)
+    assert len(violations) == 2
+    assert all("throughput" in v for v in violations)
+    assert compare(BASELINE, fresh, check_throughput=False) == []
 
 
 # --------------------------------------------- schema drift (ISSUE-8)

@@ -1,0 +1,236 @@
+"""Declarative config spine (DESIGN.md §12): the built-in YAML-subset
+parser, the ``_include`` chain, precedence (defaults < includes < file
+< CLI overrides), parse-time validation, and the serve CLI override
+layer."""
+import argparse
+import os
+
+import numpy as np
+import pytest
+
+from repro.config import (SERVE_DEFAULTS, Config, ConfigError,
+                          _parse_yaml_subset, deep_update,
+                          overrides_from_args, validate_serve)
+from repro.launch.serve import (_CLI_SPEC, build_arg_parser,
+                                load_serve_config, mixed_request_stream)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------ YAML subset parser
+def test_yaml_subset_scalars_and_comments():
+    doc = _parse_yaml_subset(
+        "a: 1            # int\n"
+        "b: -2.5\n"
+        "c: 1e3\n"
+        "d: true\n"
+        "e: null\n"
+        "f: 'quoted # not a comment'\n"
+        "g: .inf\n"
+        "h: plain string\n")
+    assert doc == {"a": 1, "b": -2.5, "c": 1000.0, "d": True, "e": None,
+                   "f": "quoted # not a comment", "g": float("inf"),
+                   "h": "plain string"}
+    assert isinstance(doc["a"], int) and isinstance(doc["c"], float)
+
+
+def test_yaml_subset_nested_maps_and_lists():
+    doc = _parse_yaml_subset(
+        "serve:\n"
+        "  slo:\n"
+        "    p2p:\n"
+        "      deadline_ms: 60.0\n"
+        "      batch: 8\n"
+        "grid:\n"
+        "  - [0.05, 2q]\n"
+        "  - [1.0, lru]\n"
+        "depths: [1, 2, 4]\n"
+        "jobs:\n"
+        "  - name: a\n"
+        "    n: 1\n"
+        "  - name: b\n"
+        "    n: 2\n")
+    assert doc["serve"]["slo"]["p2p"] == {"deadline_ms": 60.0, "batch": 8}
+    assert doc["grid"] == [[0.05, "2q"], [1.0, "lru"]]
+    assert doc["depths"] == [1, 2, 4]
+    assert doc["jobs"] == [{"name": "a", "n": 1}, {"name": "b", "n": 2}]
+
+
+@pytest.mark.parametrize("text, what", [
+    ("a: &anchor 1\n", "anchor"),
+    ("a: {b: 1}\n", "flow map"),
+    ("a: 1\na: 2\n", "duplicate key"),
+    ("a:\n\tb: 1\n", "tab indentation"),
+    ("- just\n- a list\n", "non-mapping top level"),
+])
+def test_yaml_subset_rejects_unsupported(text, what):
+    with pytest.raises(ConfigError):
+        _parse_yaml_subset(text)
+
+
+def test_checked_in_configs_parse_and_validate():
+    cfg = Config(os.path.join(REPO, "configs", "serve_mixed.yaml"),
+                 defaults=SERVE_DEFAULTS)
+    assert len(cfg.includes) == 1            # serve_base.yaml
+    assert cfg.get("serve.scheduler") == "slo"
+    assert cfg.get("serve.mix") == {"ssd": 1, "p2p": 3}
+    assert cfg.get("serve.slo.p2p.deadline_ms") == 60.0
+    assert cfg.get("serve.slo.p2p.batch") == 8
+    assert cfg.get("store.enabled") is False  # include-chain key survives
+    validate_serve(cfg)
+
+    bench = Config(os.path.join(REPO, "configs", "bench_serve.yaml"))
+    assert bench.get("bench.batch_sizes") == [1, 16, 128]
+    assert bench.get("bench.store.cache_grid")[0] == [0.05, "2q"]
+    assert bench.get("bench.slo.classes.ssd.deadline_ms") == 200.0
+
+
+# ------------------------------------------------- include chain resolution
+def test_include_chain_precedence(tmp_path):
+    (tmp_path / "base.yaml").write_text(
+        "serve:\n  batch: 4\n  rate: 1.0\n")
+    (tmp_path / "child.yaml").write_text(
+        "_include: base.yaml\nserve:\n  batch: 8\n")
+    cfg = Config(str(tmp_path / "child.yaml"),
+                 defaults={"serve": {"batch": 1, "rate": 0.0, "keep": 7}},
+                 overrides={"serve": {"rate": 9.0}})
+    assert cfg.get("serve.batch") == 8       # file beats its include
+    assert cfg.get("serve.rate") == 9.0      # override beats the file
+    assert cfg.get("serve.keep") == 7        # defaults survive the layers
+    assert cfg.includes == [str(tmp_path / "base.yaml")]
+
+
+def test_include_resolved_relative_to_including_file(tmp_path):
+    (tmp_path / "base.yaml").write_text("a: 1\n")
+    sub = tmp_path / "sub"
+    sub.mkdir()
+    (sub / "inner.yaml").write_text("_include: ../base.yaml\nb: 2\n")
+    cfg = Config(str(sub / "inner.yaml"))
+    assert cfg.get("a") == 1 and cfg.get("b") == 2
+
+
+def test_include_cycle_is_an_error(tmp_path):
+    (tmp_path / "a.yaml").write_text("_include: b.yaml\n")
+    (tmp_path / "b.yaml").write_text("_include: a.yaml\n")
+    with pytest.raises(ConfigError, match="circular"):
+        Config(str(tmp_path / "a.yaml"))
+
+
+def test_missing_include_is_an_error(tmp_path):
+    (tmp_path / "c.yaml").write_text("_include: nope.yaml\n")
+    with pytest.raises(ConfigError, match="cannot read"):
+        Config(str(tmp_path / "c.yaml"))
+
+
+def test_deep_update_merges_dicts_replaces_lists():
+    base = {"a": {"l": [1, 2, 3], "keep": 1}, "top": 0}
+    deep_update(base, {"a": {"l": [9]}})
+    assert base == {"a": {"l": [9], "keep": 1}, "top": 0}
+
+
+# ----------------------------------------------------------- accessors
+def test_get_require_sub_flat():
+    cfg = Config(None, defaults={"serve": {"slo": {"p2p":
+                                                  {"deadline_ms": 60.0}}}})
+    assert cfg.get("serve.slo.p2p.deadline_ms") == 60.0
+    assert cfg.get("serve.slo.knn.deadline_ms", 5.0) == 5.0
+    with pytest.raises(ConfigError, match="serve.missing"):
+        cfg.require("serve.missing")
+    assert cfg.sub("serve.slo").get("p2p.deadline_ms") == 60.0
+    assert cfg.flat() == {"serve.slo.p2p.deadline_ms": 60.0}
+
+
+# ------------------------------------------------- parse-time validation
+def test_validate_serve_defaults_pass():
+    cfg = Config(None, defaults=SERVE_DEFAULTS)
+    assert validate_serve(cfg) is cfg
+
+
+@pytest.mark.parametrize("overrides, key", [
+    ({"store": {"cache_frac": 0.0}}, "store.cache_frac"),
+    ({"store": {"cache_frac": 1.5}}, "store.cache_frac"),
+    ({"store": {"pin_frac": -0.1}}, "store.pin_frac"),
+    ({"serve": {"max_wait_ms": -1.0}}, "serve.max_wait_ms"),
+    ({"serve": {"batch": 0}}, "serve.batch"),
+    ({"serve": {"cache_entries": -1}}, "serve.cache_entries"),
+    ({"store": {"queue_depth": 0}}, "store.queue_depth"),
+    ({"store": {"decode_workers": 0}}, "store.decode_workers"),
+    ({"store": {"cache_policy": "fifo"}}, "store.cache_policy"),
+    ({"store": {"codec": "zip"}}, "store.codec"),
+    ({"serve": {"scheduler": "lifo"}}, "serve.scheduler"),
+    ({"serve": {"rate": -1.0}}, "serve.rate"),
+    ({"serve": {"threshold": 0.0}}, "serve.threshold"),
+    ({"serve": {"k": 0}}, "serve.k"),
+    ({"serve": {"slo": {"ssd": {"deadline_ms": -1.0}}}},
+     "serve.slo.ssd.deadline_ms"),
+    ({"serve": {"slo": {"ssd": {}}}}, "serve.slo.ssd.deadline_ms"),
+    ({"serve": {"slo": {"ssd": {"deadline_ms": 5.0, "batch": 0}}}},
+     "serve.slo.ssd.batch"),
+    ({"serve": {"mix": {"ssd": 0.0}}}, "serve.mix.ssd"),
+])
+def test_validate_serve_names_the_offending_key(overrides, key):
+    cfg = Config(None, defaults=SERVE_DEFAULTS, overrides=overrides)
+    with pytest.raises(ConfigError, match=key.replace(".", r"\.")):
+        validate_serve(cfg)
+
+
+def test_overrides_from_args_only_typed_flags():
+    ns = argparse.Namespace(batch=7, cache_frac=0.5)   # SUPPRESS: no others
+    assert overrides_from_args(ns, _CLI_SPEC) == {
+        "serve": {"batch": 7}, "store": {"cache_frac": 0.5}}
+
+
+# ----------------------------------------------------------- CLI layering
+@pytest.mark.parametrize("argv", [
+    ["--cache-frac", "1.5"], ["--cache-frac", "0"],
+    ["--pin-frac", "1.1"], ["--pin-frac", "-0.1"],
+    ["--max-wait-ms", "-1"], ["--batch", "0"],
+    ["--threshold", "0"], ["--k", "0"], ["--queue-depth", "0"],
+])
+def test_cli_rejects_bad_values_at_parse_time(argv, capsys):
+    with pytest.raises(SystemExit):
+        build_arg_parser().parse_args(argv)
+    assert "out of range" in capsys.readouterr().err or True
+
+
+def test_cli_defaults_and_explicit_flags():
+    ap = build_arg_parser()
+    cfg = load_serve_config(ap.parse_args([]))
+    assert cfg.get("serve.batch") == SERVE_DEFAULTS["serve"]["batch"]
+    cfg = load_serve_config(ap.parse_args(["--batch", "5",
+                                           "--scheduler", "slo"]))
+    assert cfg.get("serve.batch") == 5
+    assert cfg.get("serve.scheduler") == "slo"
+
+
+def test_cli_overrides_config_file(tmp_path):
+    path = tmp_path / "serve.yaml"
+    path.write_text("serve:\n  batch: 5\n  scheduler: slo\n")
+    ap = build_arg_parser()
+    cfg = load_serve_config(ap.parse_args(
+        ["--config", str(path), "--batch", "9"]))
+    assert cfg.get("serve.batch") == 9        # explicit flag wins
+    assert cfg.get("serve.scheduler") == "slo"  # untyped flag defers
+
+
+def test_no_prefetch_flag_inverts_into_config():
+    ap = build_arg_parser()
+    cfg = load_serve_config(ap.parse_args(["--no-prefetch"]))
+    assert cfg.get("store.prefetch") is False
+    assert load_serve_config(ap.parse_args([])).get("store.prefetch") is True
+
+
+# ------------------------------------------------------ mixed-stream helper
+def test_mixed_request_stream_deterministic_shares():
+    cfg = Config(None, defaults=SERVE_DEFAULTS,
+                 overrides={"serve": {"mix": {"ssd": 1, "p2p": 3}}})
+    a = mixed_request_stream(cfg, 100, 200, np.random.default_rng(3),
+                             p2p_pool=4)
+    b = mixed_request_stream(cfg, 100, 200, np.random.default_rng(3),
+                             p2p_pool=4)
+    assert a == b                            # same rng -> same stream
+    frac = sum(m == "p2p" for m, _ in a) / len(a)
+    assert 0.6 < frac < 0.9                  # ~3/4 share
+    pairs = {args for m, args in a if m == "p2p"}
+    assert 1 <= len(pairs) <= 4              # drawn from the small pool
+    assert all(s != t for s, t in pairs)

@@ -1,0 +1,357 @@
+"""SLO scheduler + coalescer bugfixes (DESIGN.md §12): deterministic
+timer re-arm (the double-wait regression), parameter-aware cache keys
+(the staleness regression), per-class deadline accounting, drain/close
+liveness, and bit-identical mixed-traffic answers under both admission
+policies."""
+import asyncio
+import types
+
+import numpy as np
+import pytest
+
+import repro.launch.serve as serve_mod
+from repro.config import SERVE_DEFAULTS, Config
+from repro.core import (BuildConfig, QueryEngine, build_hod,
+                        gnm_random_digraph, pack_index)
+from repro.launch.serve import (ClassSLO, QueryServer,
+                                mixed_request_stream, server_from_config)
+
+CFG = BuildConfig(max_core_nodes=32, max_core_edges=1024, seed=0)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    g = gnm_random_digraph(150, 600, seed=4)
+    res = build_hod(g, CFG)
+    ix = pack_index(g, res, chunk=64)
+    return QueryEngine(ix)
+
+
+def _fake_clock(server, t):
+    """Freeze the scheduler's clock (the ``_now`` seam); returns the
+    mutable clock object."""
+    clock = types.SimpleNamespace(t=t)
+    server._now = lambda: clock.t
+    return clock
+
+
+# ------------------------------------------- double-wait regression (fix 1)
+def test_flush_due_rearms_for_straggler(engine):
+    """A straggler left behind by a full-width take keeps its OWN
+    submit-time budget.  Pre-fix, the timer was not re-derived after
+    the flush, so the leftover waited for the next arrival (or a fresh
+    full max_wait) — ~2x max_wait in the open-loop traces."""
+    server = QueryServer(engine, batch_size=2, max_wait_ms=50.0)
+    clock = _fake_clock(server, 0.055)
+
+    async def drive():
+        loop = asyncio.get_running_loop()
+        futs = [loop.create_future() for _ in range(3)]
+        server._queues[serve_mod._FIFO] = [
+            (41, futs[0], 0.000, "ssd"),     # due (flush-by 0.050)
+            (42, futs[1], 0.001, "ssd"),
+            (43, futs[2], 0.010, "ssd")]     # not due until 0.060
+        server._flush_due()
+        assert futs[0].done() and futs[1].done()
+        assert not futs[2].done() and server.pending_count() == 1
+        # The re-armed deadline is a pure function of the pending set:
+        # the straggler's t0 + max_wait, not now + max_wait.
+        assert server._timer_deadline == pytest.approx(0.010 + 0.050)
+        clock.t = 1.0                        # let the timer find it due
+        r = await asyncio.wait_for(futs[2], timeout=10.0)
+        assert r.source == 43
+    asyncio.run(drive())
+    assert server.pending_count() == 0
+
+
+def test_straggler_keeps_budget_after_size_flush(engine):
+    server = QueryServer(engine, batch_size=2, max_wait_ms=40.0)
+    clock = _fake_clock(server, 5.0)
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(s))
+                 for s in (51, 52, 53)]
+        for _ in range(4):
+            await asyncio.sleep(0)
+        # 51+52 flushed on the size trigger; 53's timer must already be
+        # armed at its own submit-time budget.
+        assert server.stats.batches == 1 and server.pending_count() == 1
+        assert server._timer_deadline == pytest.approx(5.0 + 0.040)
+        clock.t = 6.0
+        return await asyncio.gather(*tasks)
+
+    results = asyncio.run(drive())
+    assert [r.source for r in results] == [51, 52, 53]
+
+
+def test_urgent_class_rearms_timer(engine):
+    server = QueryServer(engine, batch_size=8, scheduler="slo",
+                         modes=("ssd", "p2p"),
+                         slo={"ssd": {"deadline_ms": 500.0},
+                              "p2p": {"deadline_ms": 50.0}})
+    _fake_clock(server, 2.0)
+
+    async def drive():
+        t1 = asyncio.create_task(server.submit(61))
+        await asyncio.sleep(0)
+        assert server._timer_deadline == pytest.approx(2.0 + 0.5)
+        t2 = asyncio.create_task(server.submit(1, 2, mode="p2p"))
+        await asyncio.sleep(0)
+        # the cheaper class's tighter deadline takes over the timer
+        assert server._timer_deadline == pytest.approx(2.0 + 0.05)
+        await server.drain()
+        return await asyncio.gather(t1, t2)
+
+    r1, r2 = asyncio.run(drive())
+    assert r1.mode == "ssd" and r2.mode == "p2p"
+
+
+def test_flush_by_deadline_accounting(engine):
+    server = QueryServer(engine, batch_size=4, max_wait_ms=7.0,
+                         scheduler="slo", modes=("ssd", "p2p"),
+                         slo={"ssd": {"deadline_ms": 100.0}})
+    server._exec_ewma["ssd"] = 0.010
+    entry = (0, None, 50.0, "ssd")
+    assert server._flush_by(entry) == pytest.approx(
+        50.0 + 0.100 - server.SLO_HEADROOM * 0.010)
+    server._exec_ewma["ssd"] = 10.0          # hopeless deadline ->
+    assert server._flush_by(entry) == 50.0   # clamped at submit time
+    # a class without an SLO falls back to max_wait_ms
+    assert server._flush_by((0, None, 50.0, "p2p")) == pytest.approx(
+        50.0 + 0.007)
+
+
+# --------------------------------------- cache-staleness regression (fix 2)
+def test_within_cache_keyed_by_threshold(engine):
+    server = QueryServer(engine, batch_size=2, mode="within", within_d=8.0)
+    r1 = server.serve_stream(np.array([5], np.int32))[0]
+    server.within_d = 3.0                    # reconfigure the live server
+    r2 = server.serve_stream(np.array([5], np.int32))[0]
+    # pre-fix the LRU replayed the d=8 row; now the key carries d
+    assert server.stats.cache_hits == 0 and server.stats.batches == 2
+    np.testing.assert_array_equal(
+        r2.dist, engine.ssd_within(np.array([5], np.int32), 3.0)[0])
+    assert np.isfinite(r2.dist).sum() <= np.isfinite(r1.dist).sum()
+
+
+def test_knn_cache_keyed_by_k(engine):
+    server = QueryServer(engine, batch_size=2, mode="knn", knn_k=3)
+    r1 = server.serve_stream(np.array([7], np.int32))[0]
+    assert r1.nodes.shape == (3,)
+    server.knn_k = 5
+    r2 = server.serve_stream(np.array([7], np.int32))[0]
+    assert r2.nodes.shape == (5,)            # recomputed, not replayed
+    assert server.stats.cache_hits == 0 and server.stats.batches == 2
+
+
+def test_cache_not_shared_across_modes(engine):
+    server = QueryServer(engine, batch_size=2, modes=("ssd", "within"),
+                         within_d=4.0)
+    full = server.serve_stream(np.array([9], np.int32), mode="ssd")[0]
+    clamp = server.serve_stream(np.array([9], np.int32), mode="within")[0]
+    assert server.stats.cache_hits == 0 and server.stats.batches == 2
+    assert np.isfinite(clamp.dist).sum() <= np.isfinite(full.dist).sum()
+
+
+# ----------------------------------------------- constructor validation
+@pytest.mark.parametrize("kw", [
+    dict(batch_size=0), dict(max_wait_ms=-1.0), dict(cache_entries=-1),
+    dict(within_d=0.0), dict(knn_k=0), dict(queue_depth=0),
+    dict(decode_workers=0), dict(pin_frac=1.5), dict(scheduler="lifo"),
+    dict(mode="bogus"), dict(sssp=True, mode="p2p"),
+    dict(mode="ssd", modes=("p2p",)), dict(modes=("ssd", "ssd")),
+    dict(slo={"p2p": {"deadline_ms": 5.0}}),     # class not admitted
+    dict(slo={"ssd": 5.0}),                      # spec not a mapping
+    dict(slo={"ssd": {"deadline_ms": -1.0}}),
+])
+def test_ctor_validation(engine, kw):
+    with pytest.raises(ValueError):
+        QueryServer(engine, **kw)
+
+
+def test_ctor_engine_xor_store(engine):
+    with pytest.raises(ValueError):
+        QueryServer()
+    with pytest.raises(ValueError):
+        QueryServer(engine, store_path="/tmp/nope")
+
+
+def test_class_slo_validation():
+    with pytest.raises(ValueError):
+        ClassSLO(deadline_ms=0.0)
+    with pytest.raises(ValueError):
+        ClassSLO(deadline_ms=5.0, batch=0)
+    assert ClassSLO(deadline_ms=5.0).batch is None
+
+
+def test_submit_validates_mode_and_target(engine):
+    server = QueryServer(engine, batch_size=2)
+
+    async def drive():
+        with pytest.raises(ValueError):
+            await server.submit(1, mode="p2p")   # not an admitted mode
+        with pytest.raises(ValueError):
+            await server.submit(1, 2)            # target outside p2p
+    asyncio.run(drive())
+
+
+# ----------------------------------------------------- drain() and close()
+def test_drain_answers_everything_and_disarms_timer(engine):
+    server = QueryServer(engine, batch_size=64, max_wait_ms=10_000.0)
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(s))
+                 for s in (71, 72, 73)]
+        for _ in range(3):
+            await asyncio.sleep(0)
+        assert server.pending_count() == 3
+        assert server._timer is not None         # in-flight flush timer
+        await server.drain()
+        assert server.pending_count() == 0
+        assert server._timer is None and server._timer_deadline is None
+        return await asyncio.gather(*tasks)
+
+    results = asyncio.run(drive())
+    direct = engine.ssd(np.array([71, 72, 73], np.int32))
+    for r, d in zip(results, direct):
+        np.testing.assert_array_equal(r.dist, d)
+
+
+def test_close_fails_pending_futures(engine):
+    server = QueryServer(engine, batch_size=64, max_wait_ms=10_000.0)
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(s)) for s in (81, 82)]
+        for _ in range(3):
+            await asyncio.sleep(0)
+        assert server.pending_count() == 2
+        server.close()
+        assert server.pending_count() == 0 and server._timer is None
+        return await asyncio.gather(*tasks, return_exceptions=True)
+
+    out = asyncio.run(drive())
+    assert all(isinstance(e, RuntimeError) for e in out)  # nobody hangs
+    assert "closed" in str(out[0])
+
+
+# ------------------------------------------------- mixed-traffic scheduling
+def test_fifo_take_splits_modes_in_arrival_order(engine):
+    server = QueryServer(engine, batch_size=4, max_wait_ms=5_000.0,
+                         modes=("ssd", "p2p"))
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(1)),
+                 asyncio.create_task(server.submit(2, 3, mode="p2p")),
+                 asyncio.create_task(server.submit(2)),
+                 asyncio.create_task(server.submit(4, 5, mode="p2p"))]
+        return await asyncio.gather(*tasks)
+
+    results = asyncio.run(drive())
+    assert server.stats.batches == 2         # one take, two mode groups
+    assert [r.mode for r in results] == ["ssd", "p2p", "ssd", "p2p"]
+    assert all(r.batched_with == 2 for r in results)
+    np.testing.assert_array_equal(
+        results[0].dist, engine.ssd(np.array([1], np.int32))[0])
+    np.testing.assert_array_equal(
+        results[1].dist,
+        np.float32(engine.p2p(np.array([2], np.int32),
+                              np.array([3], np.int32))[0]))
+
+
+def test_class_batch_cap_triggers_early_flush(engine):
+    server = QueryServer(engine, batch_size=16, max_wait_ms=10_000.0,
+                         scheduler="slo",
+                         slo={"ssd": {"deadline_ms": 10_000.0,
+                                      "batch": 2}})
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(31)),
+                 asyncio.create_task(server.submit(32))]
+        for _ in range(3):
+            await asyncio.sleep(0)
+        assert server.pending_count() == 0   # cap hit: no timer wait
+        return await asyncio.gather(*tasks)
+
+    results = asyncio.run(drive())
+    assert server.stats.batches == 1
+    assert results[0].batched_with == 2
+    assert server.stats.padded_slots == 14   # still padded to the jit shape
+
+
+def test_deadline_miss_accounting(engine):
+    server = QueryServer(engine, batch_size=4, max_wait_ms=1.0,
+                         scheduler="slo",
+                         slo={"ssd": {"deadline_ms": 0.0005}})
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(s))
+                 for s in (21, 22, 23)]
+        await asyncio.sleep(0)
+        await server.drain()
+        return await asyncio.gather(*tasks)
+
+    asyncio.run(drive())
+    assert server.stats.deadline_misses == 3     # nothing beats 0.5us
+    assert server.metrics.counter("slo.miss.ssd").value == 3
+    rows = {r["cls"]: r for r in server.slo_report()}
+    assert rows["ssd"]["deadline_misses"] == 3
+    assert rows["ssd"]["requests"] == 3
+    assert rows["ssd"]["deadline_ms"] == 0.0005
+
+
+@pytest.mark.parametrize("scheduler", ["fifo", "slo"])
+def test_mixed_load_bit_identical_to_unscheduled(engine, scheduler):
+    """Property test (ISSUE-9 satellite): whatever the admission policy
+    does to batching order, every answer must be bit-identical to a
+    singleton engine call on the unscheduled path."""
+    cfg = Config(None, defaults=SERVE_DEFAULTS,
+                 overrides={"serve": {"mix": {"ssd": 1, "p2p": 3}}})
+    stream = mixed_request_stream(cfg, 150, 60,
+                                  np.random.default_rng(11), p2p_pool=8)
+    slo = ({"p2p": {"deadline_ms": 50.0, "batch": 4},
+            "ssd": {"deadline_ms": 200.0}} if scheduler == "slo" else None)
+    server = QueryServer(engine, batch_size=8, max_wait_ms=5.0,
+                         modes=("ssd", "p2p"), scheduler=scheduler,
+                         slo=slo)
+
+    async def drive():
+        tasks = [asyncio.create_task(server.submit(*args, mode=m))
+                 for m, args in stream]
+        await asyncio.sleep(0)
+        await server.drain()
+        return await asyncio.gather(*tasks)
+
+    results = asyncio.run(drive())
+    assert server.stats.requests == len(stream)
+    for (m, args), r in zip(stream, results):
+        if m == "p2p":
+            s, t = args
+            oracle = engine.p2p(np.array([s], np.int32),
+                                np.array([t], np.int32))[0]
+            np.testing.assert_array_equal(r.dist, np.float32(oracle))
+        else:
+            oracle = engine.ssd(np.array(args, np.int32))[0]
+            np.testing.assert_array_equal(r.dist, oracle)
+    # the small p2p pool guarantees repeats -> a real cached class
+    rows = {r["cls"] for r in server.slo_report()}
+    assert {"ssd", "p2p", "p2p.cached"} <= rows
+
+
+# --------------------------------------------------------- config plumbing
+def test_server_from_config_builds_mixed_server(engine):
+    cfg = Config(None, defaults=SERVE_DEFAULTS, overrides={
+        "serve": {"batch": 8, "scheduler": "slo",
+                  "mix": {"ssd": 1, "p2p": 3},
+                  "slo": {"p2p": {"deadline_ms": 40.0, "batch": 4}}}})
+    server = server_from_config(cfg, engine=engine)
+    assert server.modes == ("ssd", "p2p") and server.mode == "ssd"
+    assert server.scheduler == "slo" and server.batch_size == 8
+    assert server._slo["p2p"] == ClassSLO(deadline_ms=40.0, batch=4)
+
+
+def test_server_from_config_threshold_alias(engine):
+    cfg = Config(None, defaults=SERVE_DEFAULTS,
+                 overrides={"serve": {"mode": "threshold",
+                                      "threshold": 4.0}})
+    server = server_from_config(cfg, engine=engine)
+    assert server.mode == "within" and server.within_d == 4.0
