@@ -613,8 +613,26 @@ def latency_sweep(ix, sources: np.ndarray, *,
 
 
 def slo_sweep(engine, ix, slo_cfg: Config) -> list:
-    """ISSUE-9: the mixed-traffic scheduler table — one server, two
-    admission policies, one offered load.
+    """ISSUE-9: the mixed-traffic scheduler table, with one retry.
+
+    The in-sweep acceptance checks below include two *wall-clock*
+    invariants (cheap-class p99 ordering, cross-policy q/s agreement)
+    that a loaded CI machine can flake; one scheduler hiccup should
+    not fail the whole bench run, so a failed sweep is re-run once
+    before the assertion propagates.  A deterministic divergence (the
+    bit-identical check) fails both attempts identically.  The
+    recorded rows are additionally gated — with configurable
+    tolerances — by ``check_regression.py``."""
+    try:
+        return _slo_sweep_once(engine, ix, slo_cfg)
+    except AssertionError as exc:
+        print(f"slo sweep: invariant failed once ({exc}); retrying")
+        return _slo_sweep_once(engine, ix, slo_cfg)
+
+
+def _slo_sweep_once(engine, ix, slo_cfg: Config) -> list:
+    """One mixed-traffic scheduler sweep — one server, two admission
+    policies, one offered load.
 
     A seeded mixed ssd+p2p stream (shares, pool, rate, and SLO classes
     all from the ``bench.slo`` config section) is replayed twice with

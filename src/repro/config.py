@@ -357,6 +357,12 @@ SERVE_DEFAULTS: Dict[str, Any] = {
 _POLICIES = ("lru", "clock", "arc", "2q")
 _CODECS = ("raw", "delta", "f16")
 _SCHEDULERS = ("fifo", "slo")
+#: Accepted ``serve.mode`` spellings: the CLI aliases plus the two
+#: internal names (``sssp`` = the --sssp variant of ssd; ``within`` =
+#: the server-side name of ``threshold``).  A typo ("kn", "top_k")
+#: dies here with the key named, never silently coerced to ssd.
+_SERVE_MODES = ("ssd", "sssp", "p2p", "threshold", "within", "topk",
+                "knn")
 
 
 def _check(cond: bool, key: str, got: Any, want: str) -> None:
@@ -399,6 +405,9 @@ def validate_serve(cfg: Config) -> Config:
     sched = cfg.get("serve.scheduler")
     _check(sched in _SCHEDULERS, "serve.scheduler", sched,
            f"one of {_SCHEDULERS}")
+    mode = cfg.get("serve.mode")
+    _check(mode in _SERVE_MODES, "serve.mode", mode,
+           f"one of {_SERVE_MODES}")
     rate = cfg.get("serve.rate")
     _check(isinstance(rate, (int, float)) and float(rate) >= 0.0,
            "serve.rate", rate, "a non-negative req/s rate")

@@ -950,7 +950,10 @@ def server_from_config(cfg: Config, *, engine=None,
     pipeline depth — comes from ``cfg``."""
     validate_serve(cfg)
     mode = cfg.get("serve.mode", "ssd")
-    mode = {"threshold": "within"}.get(mode, mode)
+    # CLI aliases -> server modes: "threshold" is served as "within";
+    # "topk" is a batch job (core.topk_closeness driven by the caller
+    # after construction), so its server runs plain ssd sweeps.
+    mode = {"threshold": "within", "topk": "ssd"}.get(mode, mode)
     mix = cfg.get("serve.mix") or {}
     modes = tuple(mix) if mix else (mode,)
     if mode not in modes:
@@ -959,10 +962,17 @@ def server_from_config(cfg: Config, *, engine=None,
         if m not in QueryServer.MODES:
             raise ConfigError(f"config key 'serve.mix' names unknown "
                               f"mode {m!r} (one of {QueryServer.MODES})")
-    slo = {m: ClassSLO(deadline_ms=float(spec["deadline_ms"]),
-                       batch=spec.get("batch"))
-           for m, spec in (cfg.get("serve.slo") or {}).items()
-           if m in modes}
+    slo = {}
+    for m, spec in (cfg.get("serve.slo") or {}).items():
+        # Mirror QueryServer's constructor check: a typo'd class name
+        # must not silently serve with no deadline.
+        if m not in modes:
+            raise ConfigError(
+                f"config key 'serve.slo.{m}' names a class outside the "
+                f"admitted modes {modes} (fix the name or add it to "
+                f"'serve.mix')")
+        slo[m] = ClassSLO(deadline_ms=float(spec["deadline_ms"]),
+                          batch=spec.get("batch"))
     kw = dict(batch_size=cfg.get("serve.batch", 32),
               max_wait_ms=cfg.get("serve.max_wait_ms", 2.0),
               cache_entries=cfg.get("serve.cache_entries", 1024),
@@ -996,8 +1006,18 @@ def mixed_request_stream(cfg: Config, n_nodes: int, n_requests: int,
     names = sorted(mix)
     shares = np.asarray([float(mix[m]) for m in names], dtype=np.float64)
     shares /= shares.sum()
-    pool = rng.integers(0, n_nodes, size=(max(2, p2p_pool), 2))
-    pool = pool[pool[:, 0] != pool[:, 1]] if n_nodes > 1 else pool
+    size = max(2, p2p_pool)
+    pool = rng.integers(0, n_nodes, size=(size, 2))
+    if n_nodes > 1:
+        # Drop self-pairs, but never to an empty pool: on tiny graphs
+        # one draw can be all self-pairs, and an empty pool would make
+        # the first p2p request raise.  n_nodes > 1 guarantees the
+        # resample loop terminates.
+        kept = pool[pool[:, 0] != pool[:, 1]]
+        while len(kept) == 0:
+            pool = rng.integers(0, n_nodes, size=(size, 2))
+            kept = pool[pool[:, 0] != pool[:, 1]]
+        pool = kept
     picks = rng.choice(len(names), size=n_requests, p=shares)
     stream: List[Tuple[str, tuple]] = []
     for i in range(n_requests):
@@ -1198,10 +1218,17 @@ def main() -> None:
     if sssp and cli_mode != "ssd":
         ap.error("--sssp only combines with the default ssd mode")
     # CLI "threshold" = server mode "within"; "topk" drives the engine
-    # directly through core.closeness (it is a batch job, not a stream).
-    server_mode = {"ssd": "sssp" if sssp else "ssd",
+    # directly through core.closeness (it is a batch job, not a
+    # stream), so its server runs plain ssd sweeps.  validate_serve
+    # already rejected anything outside this table — no fallback.
+    server_mode = {"ssd": "sssp" if sssp else "ssd", "sssp": "sssp",
                    "p2p": "p2p", "threshold": "within",
-                   "knn": "knn"}.get(cli_mode, "ssd")
+                   "within": "within", "knn": "knn",
+                   "topk": "ssd"}[cli_mode]
+    # The server is built from the *remapped* mode so the config path
+    # and the CLI agree (a raw serve.mode of "topk" is not a server
+    # mode and must never reach QueryServer).
+    cfg.data.setdefault("serve", {})["mode"] = server_mode
     mix = cfg.get("serve.mix") or {}
     if cli_mode != "topk" and not mix:
         cfg.data.setdefault("serve", {})["mix"] = {server_mode: 1.0}
@@ -1222,26 +1249,37 @@ def main() -> None:
     print(f"index built in {time.perf_counter()-t0:.1f}s "
           f"({ix.n_levels} levels, core {ix.n_core}, "
           f"{res.stats.shortcuts_added} shortcuts)")
-    if cfg.get("store.enabled"):
-        import tempfile
-        store_dir = tempfile.mkdtemp(prefix="hod_store_")
-        ix.save_store(store_dir, codec=cfg.get("store.codec"))
-        from ..storage import segment_bytes, segment_logical_bytes
-        # budget against the DECOMPRESSED footprint: the cache meters
-        # decompressed bytes, so a fraction of the compressed file size
-        # would shrink the effective budget by the compression ratio
-        frac = float(cfg.get("store.cache_frac"))
-        budget = int(frac * segment_logical_bytes(store_dir))
-        print(f"store: {store_dir} ({cfg.get('store.codec')} codec, "
-              f"{segment_bytes(store_dir)} bytes on disk, page cache "
-              f"{budget} bytes = {frac:.0%} of the "
-              f"decompressed segments)")
-        server = server_from_config(cfg, store_path=store_dir,
-                                    cache_bytes=budget, tracer=tracer)
-    else:
-        eng = QueryEngine(ix, use_pallas=cfg.get("serve.use_pallas",
-                                                 False))
-        server = server_from_config(cfg, engine=eng, tracer=tracer)
+    store_dir = None
+    try:
+        if cfg.get("store.enabled"):
+            import tempfile
+            store_dir = tempfile.mkdtemp(prefix="hod_store_")
+            ix.save_store(store_dir, codec=cfg.get("store.codec"))
+            from ..storage import segment_bytes, segment_logical_bytes
+            # budget against the DECOMPRESSED footprint: the cache
+            # meters decompressed bytes, so a fraction of the
+            # compressed file size would shrink the effective budget
+            # by the compression ratio
+            frac = float(cfg.get("store.cache_frac"))
+            budget = int(frac * segment_logical_bytes(store_dir))
+            print(f"store: {store_dir} ({cfg.get('store.codec')} codec, "
+                  f"{segment_bytes(store_dir)} bytes on disk, page cache "
+                  f"{budget} bytes = {frac:.0%} of the "
+                  f"decompressed segments)")
+            server = server_from_config(cfg, store_path=store_dir,
+                                        cache_bytes=budget,
+                                        tracer=tracer)
+        else:
+            eng = QueryEngine(ix, use_pallas=cfg.get("serve.use_pallas",
+                                                     False))
+            server = server_from_config(cfg, engine=eng, tracer=tracer)
+    except ConfigError as exc:
+        # A config error this late (e.g. an slo class outside the mix)
+        # must not leak the just-saved /tmp store.
+        if store_dir is not None:
+            import shutil
+            shutil.rmtree(store_dir, ignore_errors=True)
+        ap.error(str(exc))
     if cfg.path:
         print(f"config: {cfg.path} "
               f"(+{len(cfg.includes)} include(s)), scheduler "

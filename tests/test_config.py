@@ -158,6 +158,8 @@ def test_validate_serve_defaults_pass():
     ({"store": {"cache_policy": "fifo"}}, "store.cache_policy"),
     ({"store": {"codec": "zip"}}, "store.codec"),
     ({"serve": {"scheduler": "lifo"}}, "serve.scheduler"),
+    ({"serve": {"mode": "kn"}}, "serve.mode"),
+    ({"serve": {"mode": "top_k"}}, "serve.mode"),
     ({"serve": {"rate": -1.0}}, "serve.rate"),
     ({"serve": {"threshold": 0.0}}, "serve.threshold"),
     ({"serve": {"k": 0}}, "serve.k"),
@@ -234,3 +236,17 @@ def test_mixed_request_stream_deterministic_shares():
     pairs = {args for m, args in a if m == "p2p"}
     assert 1 <= len(pairs) <= 4              # drawn from the small pool
     assert all(s != t for s, t in pairs)
+
+
+def test_mixed_request_stream_tiny_graph_never_empties_p2p_pool():
+    # regression: on tiny graphs the self-pair filter could drop every
+    # sampled pair, and the first p2p request then raised ValueError
+    # from rng.integers(0, 0); the pool must resample instead
+    cfg = Config(None, defaults=SERVE_DEFAULTS,
+                 overrides={"serve": {"mix": {"p2p": 1}}})
+    for seed in range(20):
+        stream = mixed_request_stream(cfg, 2, 8,
+                                      np.random.default_rng(seed),
+                                      p2p_pool=2)
+        assert len(stream) == 8
+        assert all(m == "p2p" and s != t for m, (s, t) in stream)

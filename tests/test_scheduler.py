@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 import repro.launch.serve as serve_mod
-from repro.config import SERVE_DEFAULTS, Config
+from repro.config import SERVE_DEFAULTS, Config, ConfigError
 from repro.core import (BuildConfig, QueryEngine, build_hod,
                         gnm_random_digraph, pack_index)
 from repro.launch.serve import (ClassSLO, QueryServer,
@@ -355,3 +355,23 @@ def test_server_from_config_threshold_alias(engine):
                                       "threshold": 4.0}})
     server = server_from_config(cfg, engine=engine)
     assert server.mode == "within" and server.within_d == 4.0
+
+
+def test_server_from_config_topk_builds_ssd_server(engine):
+    # regression: `--mode topk` crashed server_from_config with
+    # "serve.mix names unknown mode 'topk'" — topk is a batch job
+    # driven through core.topk_closeness, its server runs ssd sweeps
+    cfg = Config(None, defaults=SERVE_DEFAULTS,
+                 overrides={"serve": {"mode": "topk", "k": 3}})
+    server = server_from_config(cfg, engine=engine)
+    assert server.mode == "ssd" and server.modes == ("ssd",)
+
+
+def test_server_from_config_rejects_unknown_slo_class(engine):
+    # a typo'd SLO class must raise like QueryServer's constructor
+    # does, not silently serve that class with no deadline
+    cfg = Config(None, defaults=SERVE_DEFAULTS, overrides={
+        "serve": {"scheduler": "slo", "mix": {"ssd": 1},
+                  "slo": {"p2p": {"deadline_ms": 40.0}}}})
+    with pytest.raises(ConfigError, match=r"serve\.slo\.p2p"):
+        server_from_config(cfg, engine=engine)
