@@ -26,6 +26,15 @@ Compared per row, matched on stable keys:
 * ``latency`` rows (key: ``mode``, ISSUE-8) — per-mode ``p99_ms`` must
   not grow by more than ``--latency-tol`` (default +50%; wall-time,
   so CI passes a looser value, like the throughput gate);
+* ``fleet`` rows (key: ``shards``, ISSUE-10) — the sharded-fleet
+  table.  A baseline shard-count row missing from the fresh run FAILS
+  (a fleet width that stopped being benchmarked cannot pass); the
+  fleet-aggregate ``hit_rate`` / ``real_bytes`` are gated by the same
+  tolerances as single-host store rows.  A *fresh-run* invariant with
+  no tolerance mirrors the in-bench assert: no ``shards > 1`` row may
+  read more bytes than the ``shards == 1`` row — the table runs the
+  raw codec precisely so this is a pure function of miss counts, and
+  sharding must not inflate I/O;
 * ``slo`` rows (key: ``cls, policy``, ISSUE-9) — the mixed-traffic
   scheduler table.  The four parent class rows (``ssd``/``p2p`` ×
   ``fifo``/``slo``) must exist in the fresh run *regardless of the
@@ -214,6 +223,38 @@ def _compare_tables(base_t: dict, fresh_t: dict, hit_rate_tol: float,
                 f"{base1['real_bytes']} — read-ahead must not inflate "
                 "I/O")
 
+    # fleet table (ISSUE-10): baseline shard counts are required, the
+    # aggregate counters gate like store rows, and the no-I/O-inflation
+    # ordering is a fresh-run invariant with no tolerance.
+    fresh_fleet = {r["shards"]: r for r in fresh_t.get("fleet", ())}
+    for row in base_t.get("fleet", ()):
+        name = f"fleet[shards={row['shards']}]"
+        got = fresh_fleet.get(row["shards"])
+        if got is None:
+            out.append(f"{name}: shard-count row missing from fresh "
+                       "run — a fleet width stopped being benchmarked")
+            continue
+        floor = row["hit_rate"] - hit_rate_tol
+        if got["hit_rate"] < floor:
+            out.append(
+                f"{name}: fleet hit rate {got['hit_rate']:.3f} < "
+                f"{floor:.3f} (baseline {row['hit_rate']:.3f} "
+                f"- {hit_rate_tol:.0%}pp)")
+        ceil = (1.0 + bytes_tol) * row["real_bytes"]
+        if got["real_bytes"] > max(ceil, row["real_bytes"]):
+            out.append(
+                f"{name}: bytes read {got['real_bytes']} > "
+                f"{ceil:.0f} (baseline {row['real_bytes']} "
+                f"+ {bytes_tol:.0%})")
+    solo = fresh_fleet.get(1)
+    if solo is not None:
+        for n, row in sorted(fresh_fleet.items()):
+            if n > 1 and row["real_bytes"] > solo["real_bytes"]:
+                out.append(
+                    f"fleet[shards={n}]: read {row['real_bytes']} "
+                    f"bytes > shards=1's {solo['real_bytes']} — "
+                    "sharding must not inflate I/O")
+
     fresh_wl = {r["workload"]: r for r in fresh_t.get("workloads", ())}
     for row in base_t.get("workloads", ()):
         name = f"workloads[{row['workload']}]"
@@ -310,6 +351,43 @@ def _compare_tables(base_t: dict, fresh_t: dict, hit_rate_tol: float,
     return out
 
 
+#: argv flag dest → module default, for the three-layer tolerance
+#: resolution in :func:`resolve_tolerances`.
+_TOL_DEFAULTS = {
+    "hit_rate_tol": HIT_RATE_TOL,
+    "throughput_tol": THROUGHPUT_TOL,
+    "bytes_tol": BYTES_TOL,
+    "latency_tol": LATENCY_TOL,
+}
+
+
+def resolve_tolerances(args: argparse.Namespace) -> dict:
+    """Tolerance knobs layered defaults < ``--config`` ``gate:``
+    section < explicit argv flags (flags use ``argparse.SUPPRESS`` so
+    only ones the caller actually passed are present on ``args``)."""
+    tols = dict(_TOL_DEFAULTS)
+    cfg_path = getattr(args, "config", None)
+    if cfg_path:
+        try:
+            from repro.config import Config
+        except ImportError as exc:
+            raise SystemExit(
+                f"--config needs repro on the path (PYTHONPATH=src): "
+                f"{exc}")
+        gate = Config(cfg_path).get("gate") or {}
+        unknown = set(gate) - set(tols)
+        if unknown:
+            raise SystemExit(
+                f"{cfg_path}: unknown gate key(s) {sorted(unknown)} — "
+                f"expected {sorted(tols)}")
+        for k, v in gate.items():
+            tols[k] = float(v)
+    for k in tols:
+        if hasattr(args, k):
+            tols[k] = getattr(args, k)
+    return tols
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail (exit 1) when a fresh BENCH_serve run "
@@ -318,30 +396,39 @@ def main(argv=None) -> int:
                     help="committed baseline BENCH_serve.json")
     ap.add_argument("--fresh", required=True,
                     help="freshly generated BENCH_serve.json")
-    ap.add_argument("--hit-rate-tol", type=float, default=HIT_RATE_TOL,
-                    help="max absolute hit-rate drop (default 0.05)")
+    ap.add_argument("--config", default=None,
+                    help="YAML whose `gate:` section sets the "
+                         "tolerance knobs (configs/bench_serve.yaml); "
+                         "explicit flags below still override it")
+    ap.add_argument("--hit-rate-tol", type=float,
+                    default=argparse.SUPPRESS,
+                    help=f"max absolute hit-rate drop "
+                         f"(default {HIT_RATE_TOL})")
     ap.add_argument("--throughput-tol", type=float,
-                    default=THROUGHPUT_TOL,
-                    help="max relative throughput drop (default 0.20)")
-    ap.add_argument("--bytes-tol", type=float, default=BYTES_TOL,
-                    help="max relative bytes-read growth (default 0.10)")
-    ap.add_argument("--latency-tol", type=float, default=LATENCY_TOL,
-                    help="max relative per-mode p99 latency growth "
-                         "(default 0.50; wall-time — loosen on CI)")
+                    default=argparse.SUPPRESS,
+                    help=f"max relative throughput drop "
+                         f"(default {THROUGHPUT_TOL})")
+    ap.add_argument("--bytes-tol", type=float,
+                    default=argparse.SUPPRESS,
+                    help=f"max relative bytes-read growth "
+                         f"(default {BYTES_TOL})")
+    ap.add_argument("--latency-tol", type=float,
+                    default=argparse.SUPPRESS,
+                    help=f"max relative per-mode p99 latency growth "
+                         f"(default {LATENCY_TOL}; wall-time — loosen "
+                         f"on CI)")
     ap.add_argument("--no-throughput", action="store_true",
                     help="skip the machine-dependent throughput check")
     args = ap.parse_args(argv)
+    tols = resolve_tolerances(args)
 
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     violations = compare(baseline, fresh,
-                         hit_rate_tol=args.hit_rate_tol,
-                         throughput_tol=args.throughput_tol,
-                         bytes_tol=args.bytes_tol,
-                         latency_tol=args.latency_tol,
-                         check_throughput=not args.no_throughput)
+                         check_throughput=not args.no_throughput,
+                         **tols)
     if violations:
         print(f"bench regression vs {args.baseline}:")
         for v in violations:

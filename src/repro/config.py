@@ -345,6 +345,7 @@ SERVE_DEFAULTS: Dict[str, Any] = {
         "scheduler": "fifo",        # "fifo" | "slo"
         "slo": {},                  # class -> {deadline_ms, batch?}
         "mix": {},                  # mode -> request share (mixed traffic)
+        "shards": None,             # null = unsharded; N >= 1 = fleet
     },
     "store": {
         "enabled": False, "cache_frac": 0.25, "cache_policy": "2q",
@@ -417,6 +418,10 @@ def validate_serve(cfg: Config) -> Config:
     k = cfg.get("serve.k")
     _check(isinstance(k, int) and k >= 1, "serve.k", k,
            "an integer >= 1")
+    shards = cfg.get("serve.shards")
+    _check(shards is None or (isinstance(shards, int) and shards >= 1),
+           "serve.shards", shards, "null or an integer >= 1 "
+           "(serving-fleet shard count)")
     slo = cfg.get("serve.slo", {})
     _check(isinstance(slo, dict), "serve.slo", slo,
            "a {class: {deadline_ms: ...}} mapping")

@@ -1,0 +1,9 @@
+"""Sharded serving fleet: partition a store's segments across N
+shards with fleet-wide cache accounting (DESIGN.md §13)."""
+from .fleet import (FleetCache, FleetDevice, FleetShard, FleetStats,
+                    ServingFleet, split_budget)
+from .partition import REPLICATED_SEGMENTS, StorePartition
+
+__all__ = ["FleetCache", "FleetDevice", "FleetShard", "FleetStats",
+           "ServingFleet", "split_budget", "StorePartition",
+           "REPLICATED_SEGMENTS"]

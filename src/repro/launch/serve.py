@@ -132,14 +132,17 @@ class ServerStats:
 
     def report(self, label: str = "", batch_size: Optional[int] = None,
                latency: Optional[Histogram] = None,
-               slo_rows: Optional[List[dict]] = None) -> str:
+               slo_rows: Optional[List[dict]] = None,
+               fleet_stats=None) -> str:
         """Human-readable serving summary (the CLI footer), shared with
         ``benchmarks/serve_throughput.py``.  ``latency`` is the served
         mode's ``latency_ms.*`` histogram from the server's
         :class:`~repro.obs.metrics.MetricsRegistry` — percentiles come
         from its fixed buckets, no per-request list needed.
         ``slo_rows`` (``QueryServer.slo_report()``) appends one line
-        per traffic class with its deadline accounting."""
+        per traffic class with its deadline accounting;
+        ``fleet_stats`` (``QueryServer.fleet_report()``) one line per
+        serving shard."""
         extras = []
         if batch_size is not None:
             extras.append(f"batch={batch_size}")
@@ -161,6 +164,13 @@ class ServerStats:
                 f"class {row['cls']:<12} p50 {row['p50_ms']:.2f}  "
                 f"p99 {row['p99_ms']:.2f} ms  "
                 f"({row['requests']} answered, {dl})")
+        if fleet_stats is not None:
+            lines.append(f"fleet: {len(fleet_stats.rows)} shards, "
+                         f"aggregate hit rate "
+                         f"{fleet_stats.cache.hit_rate():.3f}, "
+                         f"{fleet_stats.cache.bytes_read / 1e6:.1f} MB "
+                         "read")
+            lines.extend(fleet_stats.report_lines())
         lines.append(f"throughput: {self.throughput():.0f} queries/s "
                      "(engine-busy basis)")
         return "\n".join(lines)
@@ -278,6 +288,7 @@ class QueryServer:
                  pin_frac: Optional[float] = None,
                  queue_depth: Optional[int] = None,
                  decode_workers: Optional[int] = None,
+                 shards: Optional[int] = None,
                  engine_opts: Optional[dict] = None,
                  tracer=None,
                  metrics: Optional[MetricsRegistry] = None):
@@ -304,6 +315,16 @@ class QueryServer:
         if pin_frac is not None and not 0.0 <= pin_frac <= 1.0:
             raise ValueError(f"pin_frac must be in [0, 1], "
                              f"got {pin_frac!r}")
+        if shards is not None:
+            if shards < 1:
+                raise ValueError(f"shards must be >= 1, got {shards!r}")
+            if engine is not None:
+                raise ValueError("shards applies to store-backed "
+                                 "serving (pass store_path, not engine)")
+            if device is not None:
+                raise ValueError("pass device or shards, not both — "
+                                 "a sharded fleet meters its own "
+                                 "per-shard devices")
         if scheduler not in self.SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r} "
                              f"(one of {self.SCHEDULERS})")
@@ -346,9 +367,23 @@ class QueryServer:
             # so no synthetic scan charge is applied per batch.
             from ..storage import (IndexStore, PageCache,
                                    StreamingQueryEngine)
-            cache = PageCache(cache_bytes, policy=cache_policy,
-                              pin_frac=pin_frac)
-            store = IndexStore(store_path, device=device, cache=cache)
+            if shards is not None:
+                # Sharded fleet (DESIGN.md §13): the store's cache and
+                # device are routing façades over N per-shard slices;
+                # the engine below is the unchanged single-host code.
+                from ..fleet import ServingFleet
+                fleet = ServingFleet(
+                    store_path, shards, cache_bytes=cache_bytes,
+                    cache_policy=cache_policy, pin_frac=pin_frac,
+                    decode_workers=(decode_workers
+                                    if decode_workers is not None
+                                    else 2))
+                store = fleet.store
+            else:
+                cache = PageCache(cache_bytes, policy=cache_policy,
+                                  pin_frac=pin_frac)
+                store = IndexStore(store_path, device=device,
+                                   cache=cache)
             device = store.device
             opts = dict(engine_opts or {})
             if queue_depth is not None:
@@ -365,6 +400,7 @@ class QueryServer:
                              "not both")
         self.engine = engine
         self.store = getattr(engine, "store", None)   # None = in-memory
+        self.fleet = getattr(engine, "fleet", None)   # None = unsharded
         # Observability (DESIGN.md §11): the tracer threads down through
         # the engine into pipeline/cache/device hooks; the registry
         # collects per-mode latency histograms + server counters.  Both
@@ -906,6 +942,12 @@ class QueryServer:
                 rows.append(row)
         return rows
 
+    def fleet_report(self):
+        """Point-in-time :class:`repro.fleet.FleetStats` snapshot
+        (per-shard hit rates, bytes, budgets) for a sharded server;
+        ``None`` when unsharded."""
+        return self.fleet.stats() if self.fleet is not None else None
+
     @property
     def modeled_scan_bytes(self) -> int:
         """Compact-payload cost of one full index scan (the model a
@@ -990,6 +1032,7 @@ def server_from_config(cfg: Config, *, engine=None,
         pin_frac=cfg.get("store.pin_frac"),
         queue_depth=cfg.get("store.queue_depth"),
         decode_workers=cfg.get("store.decode_workers"),
+        shards=cfg.get("serve.shards"),
         engine_opts={"use_pallas": cfg.get("serve.use_pallas", False),
                      "prefetch": cfg.get("store.prefetch", True)},
         **kw)
@@ -1100,6 +1143,7 @@ _CLI_SPEC = (
     ("rate", "serve.rate"), ("max_wait_ms", "serve.max_wait_ms"),
     ("use_pallas", "serve.use_pallas"),
     ("scheduler", "serve.scheduler"),
+    ("shards", "serve.shards"),
     ("store", "store.enabled"), ("cache_frac", "store.cache_frac"),
     ("cache_policy", "store.cache_policy"), ("codec", "store.codec"),
     ("queue_depth", "store.queue_depth"),
@@ -1153,6 +1197,13 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--store", action="store_true", default=S,
                     help="serve disk-resident: save_store the index and "
                          "stream it through a bounded page cache")
+    ap.add_argument("--shards", type=_pos_int, default=S,
+                    help="serve the store as an N-shard fleet "
+                         "(DESIGN.md §13): per-shard page caches split "
+                         "the --cache-frac budget, per-shard worker "
+                         "pools read/decode in parallel; answers are "
+                         "bit-identical to unsharded serving (implies "
+                         "--store)")
     ap.add_argument("--cache-frac", type=_frac_type(0.0, 1.0,
                                                     lo_open=True),
                     default=S,
@@ -1251,7 +1302,7 @@ def main() -> None:
           f"{res.stats.shortcuts_added} shortcuts)")
     store_dir = None
     try:
-        if cfg.get("store.enabled"):
+        if cfg.get("store.enabled") or cfg.get("serve.shards") is not None:
             import tempfile
             store_dir = tempfile.mkdtemp(prefix="hod_store_")
             ix.save_store(store_dir, codec=cfg.get("store.codec"))
@@ -1348,7 +1399,8 @@ def main() -> None:
             label=label, batch_size=int(cfg.get("serve.batch")),
             latency=server.metrics.histogram(
                 f"latency_ms.{server.mode}"),
-            slo_rows=server.slo_report()))
+            slo_rows=server.slo_report(),
+            fleet_stats=server.fleet_report()))
         kind = "measured" if server.store is not None else "modeled"
         io_s = io.modeled_seconds(block_bytes=server.device.block_bytes)
         print(f"{kind} disk: {io.seq_blocks} seq + {io.rand_blocks} rand "

@@ -35,7 +35,8 @@ __all__ = ["SCHEMA_VERSION", "Counter", "Gauge", "Histogram",
 #: snapshot or bench table changes shape incompatibly;
 #: ``check_regression.py`` refuses to compare mismatched versions.
 #: v2: BENCH_serve.json gained the ``slo`` table (ISSUE-9).
-SCHEMA_VERSION = 2
+#: v3: BENCH_serve.json gained the ``fleet`` table (ISSUE-10).
+SCHEMA_VERSION = 3
 
 
 def exp_buckets(lo: float = 0.05, hi: float = 60_000.0,

@@ -34,7 +34,8 @@ else:  # pragma: no cover - exercised on older JAX only
 __all__ = [
     "AxisRules", "axis_rules", "current_rules", "current_mesh",
     "logical_to_spec", "shard", "sharding_for", "maybe_shard_map",
-    "psum", "psum_scatter", "all_gather", "axis_size", "axis_index",
+    "psum", "pmax", "pmin", "psum_scatter", "all_gather", "axis_size",
+    "axis_index",
 ]
 
 _state = threading.local()
@@ -145,6 +146,14 @@ def psum(x, axes: Sequence[str]):
 def pmax(x, axes: Sequence[str]):
     axes = tuple(axes)
     return jax.lax.pmax(x, axes) if axes else x
+
+
+def pmin(x, axes: Sequence[str]):
+    """Cross-shard min — the (min, +) semiring's reduction, i.e. how a
+    fleet merges per-shard distance rows when the batch axis is sharded
+    (DESIGN.md §13)."""
+    axes = tuple(axes)
+    return jax.lax.pmin(x, axes) if axes else x
 
 
 def psum_scatter(x, axes: Sequence[str], scatter_dimension: int = 0):

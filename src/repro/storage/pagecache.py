@@ -180,6 +180,20 @@ class CacheStats:
                           self.bytes_filled - other.bytes_filled,
                           self.pinned_bytes)
 
+    def __add__(self, other: "CacheStats") -> "CacheStats":
+        """Fleet aggregation (``repro.fleet``): counters sum; the
+        gauges sum too — the fleet-wide peak/pinned figure is the sum
+        of per-shard residency highs (an upper bound on simultaneous
+        residency, the budget-accounting side callers care about)."""
+        return CacheStats(self.hits + other.hits,
+                          self.misses + other.misses,
+                          self.evictions + other.evictions,
+                          self.bytes_read + other.bytes_read,
+                          self.peak_bytes + other.peak_bytes,
+                          self.ghost_hits + other.ghost_hits,
+                          self.bytes_filled + other.bytes_filled,
+                          self.pinned_bytes + other.pinned_bytes)
+
     def snapshot(self) -> "CacheStats":
         return dataclasses.replace(self)
 

@@ -103,10 +103,11 @@ class PipelineStats:
 
 class _LevelTicket:
     """One submitted level: its cache entries (bytes or in-flight
-    :class:`PendingBlock` placeholders), the modeled device seconds of
-    the reads this level owned (computed at submit time, before the
-    ticket is visible to anyone), and the trace span id stitching its
-    read/decode/wait events together."""
+    :class:`PendingBlock` placeholders), the per-shard-device modeled
+    seconds vector of the reads this level owned (computed at submit
+    time, before the ticket is visible to anyone; length 1 on a solo
+    store, empty for a zero-row level), and the trace span id
+    stitching its read/decode/wait events together."""
 
     __slots__ = ("seg", "name", "lvl", "skip", "entries", "io_s",
                  "span_id")
@@ -116,7 +117,7 @@ class _LevelTicket:
         self.seg, self.lvl, self.skip = seg, lvl, skip
         self.name = name
         self.entries = entries
-        self.io_s = 0.0
+        self.io_s = ()
         self.span_id = span_id
 
     def collect(self):
@@ -161,11 +162,29 @@ class ReadPipeline:
         self.queue_depth = int(queue_depth)
         self.decode_workers = int(decode_workers)
         self.stats = PipelineStats()
-        self._io = ThreadPoolExecutor(max_workers=1,
-                                      thread_name_prefix="hod-pipe-io")
-        self._decode = ThreadPoolExecutor(
-            max_workers=self.decode_workers,
-            thread_name_prefix="hod-pipe-decode")
+        # A fleet-attached store (repro/fleet) brings its own per-shard
+        # worker pools and modeled spindles; the pipeline then splits
+        # missed-block runs at ownership boundaries and dispatches each
+        # run to its owner — N devices genuinely reading in parallel.
+        # Fleet pools outlive this pipeline (the fleet shuts them down
+        # with the store); solo pools are owned and closed here.
+        fleet = getattr(store, "fleet", None)
+        self._fleet = fleet
+        if fleet is not None:
+            self._io_pools = [s.io for s in fleet.shards]
+            self._decode_pools = [s.decode for s in fleet.shards]
+            self._devs = [s.device for s in fleet.shards]
+            self._owner = fleet.owner_of_key
+            self._owns_pools = False
+        else:
+            self._io_pools = [ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="hod-pipe-io")]
+            self._decode_pools = [ThreadPoolExecutor(
+                max_workers=self.decode_workers,
+                thread_name_prefix="hod-pipe-decode")]
+            self._devs = [store.device]
+            self._owner = None
+            self._owns_pools = True
         self._inflight: List = []   # io futures, drained on close
         self.begin_sweep()
 
@@ -175,7 +194,9 @@ class ReadPipeline:
         at the sweep's first submit; the device timeline does not carry
         across sweeps)."""
         self._sim_t = 0.0           # consumer virtual time
-        self._sim_dev = 0.0         # device busy-until virtual time
+        # per-shard device busy-until virtual times (length 1 solo —
+        # the vector math then reduces to the original scalar model)
+        self._sim_dev = [0.0] * len(self._devs)
         self._reap_virtual: List[float] = []
         now = time.perf_counter()
         self._sweep_t0 = now
@@ -183,8 +204,15 @@ class ReadPipeline:
         self._first_reap = True
 
     def close(self) -> None:
-        self._io.shutdown(wait=True)
-        self._decode.shutdown(wait=True)
+        if self._owns_pools:
+            for pool in self._io_pools + self._decode_pools:
+                pool.shutdown(wait=True)
+        else:
+            # Fleet-owned pools keep running; just wait out our jobs.
+            for f in self._inflight:
+                if not f.done():
+                    f.exception()   # wait; errors already in holders
+            self._inflight = []
 
     # --------------------------------------------------------------- submit
     def submit_level(self, name: str, lvl: int,
@@ -202,10 +230,14 @@ class ReadPipeline:
         b0, b1, skip = seg._level_blocks(lvl)
         pin = pin or seg.pin_blocks
         dev = seg.device
-        st = dev.stats
-        seq0, rand0 = st.seq_blocks, st.rand_blocks
+        snaps = [(d.stats.seq_blocks, d.stats.rand_blocks)
+                 for d in self._devs]
         entries: list = []
-        runs: list = []             # [(b_lo, [(block, key, holder)...])]
+        # [(shard, b_lo, [(block, key, holder)...])]: a run breaks on
+        # a block-number gap OR a shard-ownership boundary, so each
+        # run is one pread against one shard's local extent.
+        runs: list = []
+        route = self._owner
         with span_if(tr, "pipe.submit", track="submit", plan=name,
                      level=lvl, span=sid, blocks=b1 - b0 + 1):
             for b in range(b0, b1 + 1):
@@ -217,25 +249,35 @@ class ReadPipeline:
                             dev.access_block(seg.base_block + b, d)))
                 entries.append(entry)
                 if owner:
-                    if runs and runs[-1][1][-1][0] == b - 1:
-                        runs[-1][1].append((b, key, entry))
+                    shard = route(key) if route is not None else 0
+                    if (runs and runs[-1][0] == shard
+                            and runs[-1][2][-1][0] == b - 1):
+                        runs[-1][2].append((b, key, entry))
                     else:
-                        runs.append((b, [(b, key, entry)]))
+                        runs.append((shard, b, [(b, key, entry)]))
         ticket = _LevelTicket(seg, lvl, entries, skip, name=name,
                               span_id=sid)
-        ticket.io_s = IOStats(
-            seq_blocks=st.seq_blocks - seq0,
-            rand_blocks=st.rand_blocks - rand0).modeled_seconds(
-                block_bytes=dev.block_bytes)
+        ticket.io_s = tuple(
+            IOStats(seq_blocks=d.stats.seq_blocks - s0,
+                    rand_blocks=d.stats.rand_blocks - r0
+                    ).modeled_seconds(block_bytes=dev.block_bytes)
+            for d, (s0, r0) in zip(self._devs, snaps))
         if runs:
-            self._inflight.append(self._io.submit(self._read_job, seg,
-                                                  ticket, runs))
+            by_shard: dict = {}
+            for shard, b_lo, owned in runs:
+                by_shard.setdefault(shard, []).append((b_lo, owned))
+            for shard, shard_runs in by_shard.items():
+                self._inflight.append(self._io_pools[shard].submit(
+                    self._read_job, seg, ticket, shard_runs,
+                    self._decode_pools[shard]))
         return ticket
 
-    def _read_job(self, seg, ticket: _LevelTicket, runs: list) -> None:
-        """io thread: batched extent preads, then fan the frames out to
-        the decode pool.  Cache and device accounting already happened
-        at submit time — this thread only moves bytes."""
+    def _read_job(self, seg, ticket: _LevelTicket, runs: list,
+                  decode_pool: ThreadPoolExecutor) -> None:
+        """io thread (per shard): batched extent preads, then fan the
+        frames out to the shard's decode pool.  Cache and device
+        accounting already happened at submit time — this thread only
+        moves bytes."""
         try:
             decode_jobs = []
             with span_if(self.tracer, "level.read", plan=ticket.name,
@@ -254,8 +296,8 @@ class ReadPipeline:
                             (seg, b, key, holder,
                              seg.frame_slice(raw, b_lo, b)))
             for job in decode_jobs:
-                self._decode.submit(self._decode_job, *job,
-                                    ticket.span_id)
+                decode_pool.submit(self._decode_job, *job,
+                                   ticket.span_id)
         except BaseException as exc:
             # Never leave a holder unset: every waiter would deadlock.
             for _b_lo, owned in runs:
@@ -288,14 +330,21 @@ class ReadPipeline:
         with span_if(self.tracer, "level.wait", plan=ticket.name,
                      level=ticket.lvl, span=ticket.span_id):
             slab, stall_wall = ticket.collect()
-        # Discrete-event model of the one-spindle device under the
-        # depth-N submit window (module docstring).
+        # Discrete-event model of the spindle(s) under the depth-N
+        # submit window (module docstring).  One busy-until clock per
+        # shard device: a level completes when its *slowest* shard's
+        # reads land, so fleet stall is the max over shards — spindles
+        # work in parallel, which is exactly the fleet speedup story.
+        # At one device the vector math is the original scalar model.
         i = len(self._reap_virtual)
         self._sim_t += compute
         window = (self._reap_virtual[i - self.queue_depth]
                   if i >= self.queue_depth else 0.0)
-        dev_done = max(self._sim_dev, window) + ticket.io_s
-        stall = max(0.0, dev_done - self._sim_t)
+        io_v = (ticket.io_s if ticket.io_s
+                else (0.0,) * len(self._sim_dev))
+        dev_done = [max(sd, window) + io
+                    for sd, io in zip(self._sim_dev, io_v)]
+        stall = max(0.0, max(dev_done) - self._sim_t)
         self._sim_t += stall
         self._sim_dev = dev_done
         self._reap_virtual.append(self._sim_t)

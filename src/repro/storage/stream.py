@@ -85,6 +85,10 @@ class StreamingQueryEngine(QueryEngine):
                  queue_depth: int = 4, decode_workers: int = 2,
                  tracer=None):
         self.store = store
+        #: the ServingFleet when the store is sharded (repro/fleet) —
+        #: surfaced so servers can report per-shard stats without
+        #: reaching through storage internals.
+        self.fleet = getattr(store, "fleet", None)
         self.prefetch = bool(prefetch)
         self._init_engine(store.resident, core_mode, use_pallas, eps,
                           interpret)
